@@ -1,0 +1,78 @@
+"""Fig. 4 reproduction: proxy values vs synthesized area, fixed ET.
+
+For each benchmark circuit we collect (proxy, area) points from
+* SHARED (several satisfying assignments, like the paper),
+* XPAT (nonshared),
+* the random sound cloud (the paper's red dots),
+and report the Pearson correlation of the template's proxy score with
+synthesized area — the paper's claim (1): PIT/ITS is a close area proxy.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.arith import benchmark
+from repro.core.baselines import random_sound
+from repro.core.search import progressive_search
+from repro.core.synth import area
+
+
+def _pearson(x, y) -> float:
+    x, y = np.asarray(x, float), np.asarray(y, float)
+    if len(x) < 3 or x.std() == 0 or y.std() == 0:
+        return float("nan")
+    return float(np.corrcoef(x, y)[0, 1])
+
+
+def run(bench: str = "adder_i4", et: int = 1, budget_s: float = 120.0,
+        rows: list | None = None) -> dict:
+    exact = benchmark(bench)
+    t0 = time.time()
+
+    shared = progressive_search(exact, et=et, method="shared",
+                                wall_budget_s=budget_s, timeout_ms=20_000,
+                                explore_after_sat=6)
+    xpat = progressive_search(exact, et=et, method="xpat",
+                              wall_budget_s=budget_s, timeout_ms=20_000,
+                              explore_after_sat=6)
+    cloud = random_sound(exact, et=et, count=300, max_batches=40)
+
+    sh_pts = [(sum(r.proxies.values()), r.area) for r in shared.results]
+    xp_pts = [(sum(r.proxies.values()), r.area) for r in xpat.results]
+    rd_pts = [(sum(p.values()), a) for a, p in cloud]
+
+    all_shared = sh_pts + rd_pts      # PIT+ITS proxy space
+    corr_shared = _pearson([p for p, _ in all_shared], [a for _, a in all_shared])
+    corr_xpat = _pearson([p for p, _ in xp_pts], [a for _, a in xp_pts])
+
+    out = {
+        "bench": bench, "et": et,
+        "exact_area": area(exact),
+        "shared_best": shared.best.area if shared.best else None,
+        "xpat_best": xpat.best.area if xpat.best else None,
+        "random_best": min((a for _, a in rd_pts), default=None),
+        "n_shared_pts": len(sh_pts), "n_random_pts": len(rd_pts),
+        "pearson_pit_its_vs_area": corr_shared,
+        "pearson_lpp_ppo_vs_area": corr_xpat,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    if rows is not None:
+        us = out["wall_s"] * 1e6
+        rows.append((f"fig4_{bench}_et{et}", us,
+                     f"corr={corr_shared:.3f};shared={out['shared_best']};xpat={out['xpat_best']}"))
+    return out
+
+
+def main(budget_s: float = 90.0) -> list[dict]:
+    results = []
+    for bench, et in [("adder_i4", 1), ("mul_i4", 1)]:
+        results.append(run(bench, et, budget_s))
+    return results
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

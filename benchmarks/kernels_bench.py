@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks (CPU timings of the jnp reference path; the
+Pallas kernels themselves are TPU-targeted and validated in interpret
+mode, so what we time here is the semantic workload)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arith import benchmark
+from repro.core.circuits import input_truth_tables
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def main(rows: list | None = None) -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    out = []
+
+    # template_eval: population scoring throughput
+    exact = benchmark("mul_i8")
+    in_tt = jnp.asarray(input_truth_tables(8))
+    ev = jnp.asarray(exact.eval_words().astype(np.int32))
+    P, T = 8192, 12
+    lits = jnp.asarray(rng.integers(0, 3, size=(P, T, 8)), dtype=jnp.int32)
+    sel = jnp.asarray((rng.random((P, 8, T)) < 0.4), dtype=jnp.int32)
+    f = jax.jit(lambda l, s: ops.template_eval(l, s, in_tt, ev, backend="ref"))
+    us = _time(f, lits, sel)
+    out.append(("template_eval_8k_pop", us, f"{P/(us/1e6):.0f} cands/s"))
+
+    # approx_matmul: LUT matmul vs float matmul
+    M = K = N = 512
+    a = jnp.asarray(rng.integers(0, 16, (M, K)), dtype=jnp.int32)
+    b = jnp.asarray(rng.integers(0, 16, (K, N)), dtype=jnp.int32)
+    lut = jnp.asarray(rng.integers(0, 226, (16, 16)), dtype=jnp.int32)
+    f = jax.jit(lambda x, y: ops.approx_matmul(x, y, lut, backend="ref"))
+    us = _time(f, a, b)
+    gflops = 2 * M * K * N / (us / 1e6) / 1e9
+    out.append((f"approx_matmul_{M}", us, f"{gflops:.2f} eq-GFLOP/s"))
+
+    # flash_attention reference path
+    q = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)), dtype=jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 1024, 64)), dtype=jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 1024, 64)), dtype=jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, backend="ref"))
+    us = _time(f, q, k, v)
+    out.append(("attention_1k_gqa", us, "B1 H8 L1024 D64"))
+
+    if rows is not None:
+        rows.extend(out)
+    return out
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -1,0 +1,69 @@
+"""Roofline report: aggregate the dry-run JSON records into the
+EXPERIMENTS.md §Roofline table (one row per arch x shape x mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COLUMNS = [
+    "arch", "shape", "mesh", "status", "t_compute", "t_memory",
+    "t_collective", "t_star", "bottleneck", "useful_flops_ratio",
+    "roofline_fraction",
+]
+
+
+def load(dirname: str = "experiments/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows: list[dict]) -> str:
+    out = ["| arch | shape | mesh | t_comp(s) | t_mem(s) | t_coll(s) | t*(s) "
+           "| bottleneck | useful | roofline |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                       f"| — | — | — | — | SKIP: {r['reason'][:40]} | — | — |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} "
+                       f"| — | — | — | — | ERROR | — | — |")
+            continue
+        if r["mesh"] != "16x16":
+            # multi-pod cells are compile-pass only (scan-body-once stats
+            # are not corrected there; the roofline table is single-pod)
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                       f"| — | — | — | — | COMPILE-OK (pod axis shards) | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.3g} | {r['t_memory']:.3g} "
+            f"| {r['t_collective']:.3g} | {r['t_star']:.3g} "
+            f"| {r['bottleneck']} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def main(rows_out: list | None = None, dirname: str = "experiments/dryrun"):
+    rows = load(dirname)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    ok = [r for r in ok if r.get("mesh") == "16x16"]
+    if rows_out is not None:
+        for r in ok:
+            rows_out.append((
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                r["t_star"] * 1e6,
+                f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    print(table(load()))

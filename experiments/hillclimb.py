@@ -1,0 +1,60 @@
+"""§Perf hillclimb driver: baseline -> iterations for the 3 selected pairs.
+
+Each iteration re-lowers the cell with one change enabled and records the
+roofline record under a tagged filename in experiments/perf/.
+
+    PYTHONPATH=src python experiments/hillclimb.py
+"""
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
+
+OUT = os.path.join(os.path.dirname(__file__), "perf")
+
+# (arch, shape, tag, kwargs) — it0 is the re-measured baseline for exact
+# comparability (identical harness, post-baseline-archive code).
+STEPS = [
+    # -------- pair 1: deepseek-v2-lite x train_4k (worst, collective-bound)
+    ("deepseek-v2-lite-16b", "train_4k", "it1_blocked_noEP",
+     dict(rules_override={"expert_fsdp": ()})),
+    ("deepseek-v2-lite-16b", "train_4k", "it2_blocked_EP", dict()),
+    ("deepseek-v2-lite-16b", "train_4k", "it3_EP_bf16attn",
+     dict(attn_bf16=True)),
+    # -------- pair 2: mixtral x train_4k (paper-representative, collective)
+    ("mixtral-8x7b", "train_4k", "it1_blocked", dict()),
+    ("mixtral-8x7b", "train_4k", "it2_blocked_bf16attn", dict(attn_bf16=True)),
+    ("mixtral-8x7b", "train_4k", "it3_blocked_bf16_dots",
+     dict(attn_bf16=True, remat="dots")),
+    # -------- pair 3: command-r-plus x train_4k (memory-bound dense)
+    ("command-r-plus-104b", "train_4k", "it1_bf16attn", dict(attn_bf16=True)),
+    ("command-r-plus-104b", "train_4k", "it2_bf16_dots",
+     dict(attn_bf16=True, remat="dots")),
+    ("command-r-plus-104b", "train_4k", "it3_bf16_dots_mb4",
+     dict(attn_bf16=True, remat="dots", microbatches=4)),
+]
+
+
+def main() -> None:
+    os.makedirs(OUT, exist_ok=True)
+    for arch, shape, tag, kw in STEPS:
+        t0 = time.time()
+        rec = run_cell(arch, shape, multi_pod=False, out_dir=OUT, tag=tag, **kw)
+        if rec["status"] == "ok":
+            print(f"{arch:24s} {shape:10s} {tag:22s} "
+                  f"t_comp={rec['t_compute']:.3g}s t_mem={rec['t_memory']:.3g}s "
+                  f"t_coll={rec['t_collective']:.3g}s "
+                  f"roofline={rec['roofline_fraction']:.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        else:
+            print(f"{arch} {shape} {tag} -> {rec['status']}: "
+                  f"{rec.get('error','')[:200]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""The error miter (paper Fig. 1): ``∃p ∀i : dist(i, p) <= ET``.
+
+``map`` interprets a circuit's output bits as an unsigned integer (LSB =
+output 0); ``dist`` is the absolute difference between the mapped outputs of
+the exact and approximate circuits.  Soundness = the worst-case error over
+*all* input assignments is at most the error threshold (ET).
+
+Two backends:
+
+* **Exhaustive** (numpy / bit-packed): for the paper's operator sizes
+  (n <= 8, 256 assignments) the full input space is enumerable; this backend
+  is the ground truth every search result is re-validated against.
+* **Z3**: a quantifier-free expansion of the miter — one arithmetic
+  constraint per input assignment with only the *template parameters*
+  symbolic.  This mirrors what XPAT's solver sees and is the faithful
+  reproduction path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import z3
+
+from .circuits import Circuit, unpack_bits
+from .templates import NonsharedTemplate, SharedTemplate, TemplateParams
+
+__all__ = [
+    "worst_case_error",
+    "values_from_tables",
+    "MiterZ3",
+]
+
+
+def values_from_tables(tables: np.ndarray, n_inputs: int) -> np.ndarray:
+    """Packed output tables ``(m, W)`` -> per-assignment values ``(2**n,)``."""
+    bits = unpack_bits(tables, 1 << n_inputs)  # (m, S)
+    weights = np.uint64(1) << np.arange(tables.shape[0], dtype=np.uint64)
+    return (bits.astype(np.uint64) * weights[:, None]).sum(axis=0)
+
+
+def worst_case_error(exact: Circuit, approx: Circuit) -> int:
+    """Exhaustive worst-case |exact - approx| over all assignments."""
+    assert exact.n_inputs == approx.n_inputs
+    ev = exact.eval_words().astype(np.int64)
+    av = approx.eval_words().astype(np.int64)
+    return int(np.abs(ev - av).max())
+
+
+def params_sound(
+    template: NonsharedTemplate | SharedTemplate,
+    params: TemplateParams,
+    exact_values: np.ndarray,
+    et: int,
+) -> bool:
+    """Exhaustive soundness check of a parameter assignment."""
+    vals = values_from_tables(template.eval_outputs(params), template.n_inputs)
+    return bool(np.abs(vals.astype(np.int64) - exact_values.astype(np.int64)).max() <= et)
+
+
+# --------------------------------------------------------------------------
+# Z3 miter
+# --------------------------------------------------------------------------
+@dataclass
+class _SharedVars:
+    use: list[list[z3.BoolRef]]   # (T, n)
+    neg: list[list[z3.BoolRef]]   # (T, n)
+    sel: list[list[z3.BoolRef]]   # (m, T)
+
+
+class MiterZ3:
+    """Quantifier-free Z3 encoding of the XPAT/SHARED miter.
+
+    One instance per (exact circuit, template).  ``solve`` adds the proxy
+    restriction constraints of the current grid point and asks for a model;
+    the model is decoded back into :class:`TemplateParams` so that every
+    SAT result is *re-verified exhaustively* before being trusted.
+    """
+
+    def __init__(
+        self,
+        exact: Circuit,
+        template: NonsharedTemplate | SharedTemplate,
+    ) -> None:
+        self.exact = exact
+        self.template = template
+        self.n = exact.n_inputs
+        self.m = exact.n_outputs
+        self.exact_values = exact.eval_words()
+        self.shared = isinstance(template, SharedTemplate)
+        self._build_vars()
+
+    # ------------------------------------------------------------------ vars
+    def _build_vars(self) -> None:
+        n, m = self.n, self.m
+        if self.shared:
+            T = self.template.pit
+            self.use = [[z3.Bool(f"u_{t}_{j}") for j in range(n)] for t in range(T)]
+            self.neg = [[z3.Bool(f"g_{t}_{j}") for j in range(n)] for t in range(T)]
+            self.sel = [[z3.Bool(f"s_{i}_{t}") for t in range(T)] for i in range(m)]
+            self.T = T
+        else:
+            K = self.template.ppo
+            self.use = [
+                [[z3.Bool(f"u_{i}_{k}_{j}") for j in range(n)] for k in range(K)]
+                for i in range(m)
+            ]
+            self.neg = [
+                [[z3.Bool(f"g_{i}_{k}_{j}") for j in range(n)] for k in range(K)]
+                for i in range(m)
+            ]
+            self.sel = [[z3.Bool(f"s_{i}_{k}") for k in range(K)] for i in range(m)]
+            self.K = K
+
+    # ------------------------------------------------------- product/out expr
+    def _lit(self, use: z3.BoolRef, neg: z3.BoolRef, bit: bool) -> z3.BoolRef:
+        # IGNORE (use=False) -> True; else bit XOR neg
+        return z3.Or(z3.Not(use), z3.Not(neg) if bit else neg)
+
+    def _product(self, use_row, neg_row, assignment: int) -> z3.BoolRef:
+        terms = []
+        for j in range(self.n):
+            bit = bool((assignment >> j) & 1)
+            terms.append(self._lit(use_row[j], neg_row[j], bit))
+        return z3.And(*terms)
+
+    def _out_bits(self, assignment: int) -> list[z3.BoolRef]:
+        if self.shared:
+            prods = [
+                self._product(self.use[t], self.neg[t], assignment)
+                for t in range(self.T)
+            ]
+            return [
+                z3.Or(*[z3.And(self.sel[i][t], prods[t]) for t in range(self.T)])
+                for i in range(self.m)
+            ]
+        return [
+            z3.Or(
+                *[
+                    z3.And(
+                        self.sel[i][k],
+                        self._product(self.use[i][k], self.neg[i][k], assignment),
+                    )
+                    for k in range(self.K)
+                ]
+            )
+            for i in range(self.m)
+        ]
+
+    # ----------------------------------------------------------- constraints
+    def error_constraints(self, et: int) -> list[z3.BoolRef]:
+        cons = []
+        for a in range(1 << self.n):
+            bits = self._out_bits(a)
+            val = z3.Sum(*[z3.If(bits[k], 1 << k, 0) for k in range(self.m)])
+            ev = int(self.exact_values[a])
+            cons.append(val - ev <= et)
+            cons.append(ev - val <= et)
+        return cons
+
+    def proxy_constraints(self, **bounds: int) -> list[z3.BoolRef]:
+        """Shared: ``its``.  Nonshared: ``lpp``.
+
+        PIT / PPO are enforced *structurally* (pool size T / bank size K),
+        exactly as the template's structural parameter — the grid search
+        rebuilds the miter per PIT/PPO value.
+        """
+        cons: list[z3.BoolRef] = []
+        if self.shared:
+            its = bounds.get("its")
+            if its is not None and its < self.T:
+                for i in range(self.m):
+                    cons.append(z3.AtMost(*self.sel[i], its))
+        else:
+            lpp = bounds.get("lpp")
+            if lpp is not None and lpp < self.n:
+                for i in range(self.m):
+                    for k in range(self.K):
+                        cons.append(z3.AtMost(*self.use[i][k], lpp))
+        return cons
+
+    # ----------------------------------------------------------------- solve
+    def solve(
+        self,
+        et: int,
+        timeout_ms: int = 60_000,
+        seed: int = 0,
+        **proxy_bounds: int,
+    ) -> TemplateParams | None:
+        solver = z3.Solver()
+        solver.set("timeout", timeout_ms)
+        solver.set("random_seed", seed)
+        solver.add(*self.error_constraints(et))
+        solver.add(*self.proxy_constraints(**proxy_bounds))
+        if solver.check() != z3.sat:
+            return None
+        return self._decode(solver.model())
+
+    def _decode(self, model: z3.ModelRef) -> TemplateParams:
+        def b(v: z3.BoolRef) -> bool:
+            return bool(model.eval(v, model_completion=True))
+
+        from .templates import IGNORE, NEG, USE
+
+        if self.shared:
+            lits = np.full((self.T, self.n), IGNORE, dtype=np.int8)
+            for t in range(self.T):
+                for j in range(self.n):
+                    if b(self.use[t][j]):
+                        lits[t, j] = NEG if b(self.neg[t][j]) else USE
+            sel = np.array(
+                [[b(self.sel[i][t]) for t in range(self.T)] for i in range(self.m)]
+            )
+            return TemplateParams(lits, sel)
+        lits = np.full((self.m, self.K, self.n), IGNORE, dtype=np.int8)
+        for i in range(self.m):
+            for k in range(self.K):
+                for j in range(self.n):
+                    if b(self.use[i][k][j]):
+                        lits[i, k, j] = NEG if b(self.neg[i][k][j]) else USE
+        sel = np.array(
+            [[b(self.sel[i][k]) for k in range(self.K)] for i in range(self.m)]
+        )
+        return TemplateParams(lits, sel)

@@ -1,0 +1,263 @@
+"""Progressive proxy-constrained design-space exploration (paper §III).
+
+"The search starts with a strong restriction, which is progressively
+weakened until an assignment is found."  The proxy pairs are:
+
+* SHARED: ``(PIT, ITS)`` — PIT enforced structurally (pool size ``T``),
+  ITS as a cardinality constraint per sum;
+* XPAT (nonshared): ``(PPO, LPP)`` — PPO structural (bank size ``K``), LPP
+  as a cardinality constraint per product.
+
+Search strategy (documented refinement of the paper's linear weakening —
+same proxy-constrained SMT queries, better schedule):
+
+1. **Frontier probe** — double the structural parameter (PIT / PPO) with
+   the secondary proxy unconstrained until the first SAT.  UNSAT points
+   are cheap; this localizes the feasibility frontier in O(log) queries.
+2. **Grid refinement** — walk the (primary, secondary) lattice downward
+   from the frontier in ascending predicted-area order, collecting every
+   sound assignment (the paper reports several per run, Fig. 4).
+3. **Literal tightening** — at the best grid point, binary-search the
+   total literal count (and selection count) with ``z3.AtMost``: the
+   solver is asked for *smaller* circuits, not just satisfying ones.
+   This is the proxy-descent the paper motivates, applied to the finest
+   template parameter.
+
+Every Z3 model is re-verified exhaustively before being trusted
+(:func:`repro.core.miter.params_sound`).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import z3
+
+from .circuits import Circuit
+from .miter import MiterZ3, params_sound
+from .synth import area, synthesize
+from .templates import NonsharedTemplate, SharedTemplate, TemplateParams
+
+__all__ = ["SearchResult", "SearchReport", "progressive_search"]
+
+
+@dataclass
+class SearchResult:
+    """One sound approximation found during the search."""
+
+    params: TemplateParams
+    circuit: Circuit              # synthesized netlist
+    area: float
+    proxies: dict[str, int]
+    grid_point: tuple[int, int]
+    wall_s: float
+
+    @property
+    def proxy_score(self) -> int:
+        return sum(self.proxies.values())
+
+
+@dataclass
+class SearchReport:
+    method: str
+    benchmark: str
+    et: int
+    results: list[SearchResult] = field(default_factory=list)
+    grid_points_tried: int = 0
+    sat_points: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def best(self) -> SearchResult | None:
+        return min(self.results, key=lambda r: r.area) if self.results else None
+
+
+class _Session:
+    """One (exact, method, et) solving session with shared bookkeeping."""
+
+    def __init__(self, exact: Circuit, method: str, et: int,
+                 timeout_ms: int, seed: int, t_start: float, budget_s: float):
+        self.exact = exact
+        self.method = method
+        self.et = et
+        self.timeout_ms = timeout_ms
+        self.seed = seed
+        self.t_start = t_start
+        self.budget_s = budget_s
+        self.exact_values = exact.eval_words()
+        self.miters: dict[int, MiterZ3] = {}
+        self.report = SearchReport(method=method, benchmark=exact.name, et=et)
+
+    def out_of_budget(self) -> bool:
+        return time.time() - self.t_start > self.budget_s
+
+    def miter(self, primary: int) -> MiterZ3:
+        if primary not in self.miters:
+            n, m = self.exact.n_inputs, self.exact.n_outputs
+            tpl = (
+                SharedTemplate(n, m, pit=primary)
+                if self.method == "shared"
+                else NonsharedTemplate(n, m, ppo=primary)
+            )
+            self.miters[primary] = MiterZ3(self.exact, tpl)
+        return self.miters[primary]
+
+    # -- one query ----------------------------------------------------------
+    def query(
+        self,
+        primary: int,
+        secondary: int | None,
+        extra: list | None = None,
+    ) -> TemplateParams | None:
+        self.report.grid_points_tried += 1
+        miter = self.miter(primary)
+        solver = z3.Solver()
+        solver.set("timeout", self.timeout_ms)
+        solver.set("random_seed", self.seed)
+        solver.add(*miter.error_constraints(self.et))
+        if secondary is not None:
+            key = "its" if self.method == "shared" else "lpp"
+            solver.add(*miter.proxy_constraints(**{key: secondary}))
+        if extra:
+            solver.add(*extra)
+        if solver.check() != z3.sat:
+            return None
+        params = miter._decode(solver.model())
+        if not params_sound(miter.template, params, self.exact_values, self.et):
+            raise AssertionError("Z3 model failed exhaustive re-verification")
+        return params
+
+    def record(self, primary: int, secondary: int, params: TemplateParams) -> SearchResult:
+        tpl = self.miter(primary).template
+        circuit = synthesize(tpl.instantiate(params, name=f"{self.exact.name}_approx"))
+        res = SearchResult(
+            params=params,
+            circuit=circuit,
+            area=area(circuit, presynthesized=True),
+            proxies=tpl.proxies(params),
+            grid_point=(primary, secondary),
+            wall_s=time.time() - self.t_start,
+        )
+        self.report.results.append(res)
+        self.report.sat_points += 1
+        return res
+
+    # -- literal tightening ---------------------------------------------------
+    def tighten(self, primary: int, secondary: int) -> None:
+        """Binary-search total literal count (then selection count) downward."""
+        miter = self.miter(primary)
+        if self.method == "shared":
+            use_bits = [u for row in miter.use for u in row]
+            sel_bits = [s for row in miter.sel for s in row]
+        else:
+            use_bits = [u for bank in miter.use for row in bank for u in row]
+            sel_bits = [s for row in miter.sel for s in row]
+
+        def best_count(bits, other_cons, hi):
+            lo, best = 0, None
+            while lo <= hi and not self.out_of_budget():
+                mid = (lo + hi) // 2
+                params = self.query(
+                    primary, secondary, extra=[z3.AtMost(*bits, mid)] + other_cons
+                )
+                if params is not None:
+                    best = (mid, params)
+                    hi = mid - 1
+                else:
+                    lo = mid + 1
+            return best
+
+        got = best_count(use_bits, [], len(use_bits))
+        if got is None:
+            return
+        lit_count, params = got
+        self.record(primary, secondary, params)
+        got2 = best_count(sel_bits, [z3.AtMost(*use_bits, lit_count)], len(sel_bits))
+        if got2 is not None:
+            self.record(primary, secondary, got2[1])
+
+
+def progressive_search(
+    exact: Circuit,
+    et: int,
+    method: str = "shared",
+    *,
+    max_primary: int | None = None,
+    explore_after_sat: int = 6,
+    timeout_ms: int = 30_000,
+    wall_budget_s: float = 600.0,
+    seed: int = 0,
+    tighten: bool = True,
+) -> SearchReport:
+    """Run the progressive search for one benchmark and ET.
+
+    ``method``: ``"shared"`` (the paper) or ``"xpat"`` (nonshared baseline).
+    """
+    n, m = exact.n_inputs, exact.n_outputs
+    if max_primary is None:
+        max_primary = 4 * m if method == "shared" else m + 4
+    sess = _Session(exact, method, et, timeout_ms, seed, time.time(), wall_budget_s)
+
+    # ---- phase 1: frontier probe (secondary unconstrained) ------------------
+    frontier = None
+    probe = 1
+    probes: list[int] = []
+    while probe <= max_primary:
+        probes.append(probe)
+        probe *= 2
+    if probes[-1] != max_primary:
+        probes.append(max_primary)
+    for primary in probes:
+        if sess.out_of_budget():
+            break
+        params = sess.query(primary, None)
+        if params is not None:
+            frontier = primary
+            sess.record(primary, primary, params)
+            break
+    if frontier is None:
+        sess.report.wall_s = time.time() - sess.t_start
+        return sess.report
+
+    # tighten primary: walk down from the frontier until UNSAT
+    lo = (frontier // 2) + 1 if frontier > 1 else 1
+    best_primary = frontier
+    for primary in range(frontier - 1, lo - 1, -1):
+        if sess.out_of_budget():
+            break
+        params = sess.query(primary, None)
+        if params is None:
+            break
+        best_primary = primary
+        sess.record(primary, primary, params)
+
+    # ---- phase 2: refine the secondary proxy at / near the frontier --------
+    sec_hi = exact.n_inputs if method == "xpat" else best_primary
+    best_secondary = sec_hi
+    explored = 0
+    for secondary in range(sec_hi - 1, 0, -1):
+        if sess.out_of_budget() or explored >= explore_after_sat:
+            break
+        params = sess.query(best_primary, secondary)
+        explored += 1
+        if params is None:
+            break
+        best_secondary = secondary
+        sess.record(best_primary, secondary, params)
+
+    # ---- phase 3: literal tightening at the best grid point ----------------
+    # minimal PIT is not minimal area: a larger pool can admit strictly
+    # fewer literals (smaller / wire-only products).  Tighten at the
+    # frontier, one above it, and at PIT=m (the one-product-per-output
+    # corner where gate-free solutions live).
+    if tighten and not sess.out_of_budget():
+        sess.tighten(best_primary, best_secondary)
+        if best_primary + 1 <= max_primary and not sess.out_of_budget():
+            sess.tighten(best_primary + 1, best_secondary + 1)
+        if method == "shared" and m > best_primary + 1 and not sess.out_of_budget():
+            sess.tighten(m, 1)
+
+    sess.report.wall_s = time.time() - sess.t_start
+    return sess.report

@@ -1,0 +1,198 @@
+"""Parametrisable sum-of-products templates — the paper's contribution.
+
+Two templates (paper §II):
+
+* :class:`NonsharedTemplate` — the original XPAT template (Eq. 1).  Every
+  output ``i`` owns a *private* bank of ``K`` products; a literal selector
+  ``p_k^j ∈ {USE, NEG, IGNORE}`` per (product, input) decides whether input
+  ``j`` enters product ``k`` as-is, negated, or not at all (constant 1), and
+  an include bit per (output, product) decides whether the product feeds the
+  sum (an all-excluded sum is constant 0).
+
+* :class:`SharedTemplate` — the paper's template (Eq. 2).  A single *global*
+  pool of ``T`` products; per-(output, product) selection bits ``s_i^t``
+  decide which pooled products feed each output sum, so product logic is
+  **shared** across outputs exactly as a synthesized multi-output netlist
+  shares subexpressions.
+
+Parameter encoding (identical for JAX / numpy / Z3 backends):
+
+* ``lits``: int8 array, ``USE=0 / NEG=1 / IGNORE=2``.
+  - nonshared shape ``(m, K, n)``; shared shape ``(T, n)``.
+* ``sel``: bool array of sum membership.
+  - nonshared shape ``(m, K)``; shared shape ``(m, T)``.
+
+The *proxies* (paper §III):
+
+* nonshared: ``LPP``  = max literals in any product,
+             ``PPO``  = max products included in any output sum.
+* shared:    ``PIT``  = products used by >= 1 output (products in total),
+             ``ITS``  = max products feeding any single sum (inputs to sums).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .circuits import ALL_ONES, Circuit, Op, input_truth_tables
+
+USE, NEG, IGNORE = 0, 1, 2
+
+__all__ = [
+    "USE",
+    "NEG",
+    "IGNORE",
+    "TemplateParams",
+    "NonsharedTemplate",
+    "SharedTemplate",
+]
+
+
+@dataclass
+class TemplateParams:
+    """A concrete parameter assignment for either template."""
+
+    lits: np.ndarray  # int8, {USE, NEG, IGNORE}
+    sel: np.ndarray   # bool
+
+    def copy(self) -> "TemplateParams":
+        return TemplateParams(self.lits.copy(), self.sel.copy())
+
+
+class _TemplateBase:
+    n_inputs: int
+    n_outputs: int
+
+    # -- API ---------------------------------------------------------------
+    def eval_outputs(self, params: TemplateParams) -> np.ndarray:
+        """Packed output truth tables ``(m, W)`` for a parameter assignment."""
+        raise NotImplementedError
+
+    def instantiate(self, params: TemplateParams, name: str = "approx") -> Circuit:
+        """Materialize the parameter assignment as a gate netlist."""
+        raise NotImplementedError
+
+    def proxies(self, params: TemplateParams) -> dict[str, int]:
+        raise NotImplementedError
+
+    # -- shared helpers ------------------------------------------------------
+    def _product_tables(self, lits: np.ndarray) -> np.ndarray:
+        """Truth tables of products.  ``lits``: (..., n) -> tables (..., W)."""
+        tt = input_truth_tables(self.n_inputs)  # (n, W)
+        use = np.where(lits[..., None] == USE, tt, ALL_ONES)
+        neg = np.where(lits[..., None] == NEG, ~tt, ALL_ONES)
+        # AND over inputs of (use-term & neg-term); IGNORE contributes all-ones
+        comb = use & neg  # broadcasting: (..., n, W)
+        out = comb[..., 0, :].copy()
+        for j in range(1, self.n_inputs):
+            out &= comb[..., j, :]
+        return out
+
+    def _emit_product(self, c: Circuit, lit_row: np.ndarray) -> int | None:
+        """Emit AND-of-literals for one product; None => constant-1 product."""
+        terms: list[int] = []
+        for j in range(self.n_inputs):
+            if lit_row[j] == USE:
+                terms.append(j)
+            elif lit_row[j] == NEG:
+                terms.append(c.add(Op.NOT, j))
+        if not terms:
+            return None
+        if len(terms) == 1:
+            return terms[0]
+        return c.add(Op.AND, *terms)
+
+    @staticmethod
+    def _emit_sum(c: Circuit, terms: list[int | None]) -> int:
+        """OR of product nodes; None (const-1 product) saturates the sum."""
+        if any(t is None for t in terms):
+            return c.const(True)
+        ids = [t for t in terms if t is not None]
+        if not ids:
+            return c.const(False)
+        if len(ids) == 1:
+            return ids[0]
+        return c.add(Op.OR, *ids)
+
+
+class NonsharedTemplate(_TemplateBase):
+    """XPAT's original template: per-output private product banks (Eq. 1)."""
+
+    def __init__(self, n_inputs: int, n_outputs: int, ppo: int):
+        self.n_inputs = n_inputs
+        self.n_outputs = n_outputs
+        self.ppo = ppo  # K: structural products per output
+
+    # parameters: lits (m, K, n), sel (m, K)
+    def random_params(self, rng: np.random.Generator) -> TemplateParams:
+        lits = rng.integers(0, 3, size=(self.n_outputs, self.ppo, self.n_inputs), dtype=np.int8)
+        sel = rng.random((self.n_outputs, self.ppo)) < 0.5
+        return TemplateParams(lits, sel)
+
+    def eval_outputs(self, params: TemplateParams) -> np.ndarray:
+        prods = self._product_tables(params.lits)  # (m, K, W)
+        masked = np.where(params.sel[..., None], prods, np.uint32(0))
+        out = masked[:, 0, :].copy()
+        for k in range(1, self.ppo):
+            out |= masked[:, k, :]
+        return out
+
+    def instantiate(self, params: TemplateParams, name: str = "approx") -> Circuit:
+        c = Circuit.empty(self.n_inputs, name=name)
+        for i in range(self.n_outputs):
+            terms = [
+                self._emit_product(c, params.lits[i, k])
+                for k in range(self.ppo)
+                if params.sel[i, k]
+            ]
+            c.mark_output(self._emit_sum(c, terms))
+        return c
+
+    def proxies(self, params: TemplateParams) -> dict[str, int]:
+        used_lits = (params.lits != IGNORE) & params.sel[..., None]
+        lpp = int(used_lits.sum(axis=-1).max(initial=0))
+        ppo = int(params.sel.sum(axis=-1).max(initial=0))
+        return {"LPP": lpp, "PPO": ppo}
+
+
+class SharedTemplate(_TemplateBase):
+    """The paper's shared template: one global product pool (Eq. 2)."""
+
+    def __init__(self, n_inputs: int, n_outputs: int, pit: int):
+        self.n_inputs = n_inputs
+        self.n_outputs = n_outputs
+        self.pit = pit  # T: structural size of the product pool
+
+    # parameters: lits (T, n), sel (m, T)
+    def random_params(self, rng: np.random.Generator) -> TemplateParams:
+        lits = rng.integers(0, 3, size=(self.pit, self.n_inputs), dtype=np.int8)
+        sel = rng.random((self.n_outputs, self.pit)) < 0.5
+        return TemplateParams(lits, sel)
+
+    def eval_outputs(self, params: TemplateParams) -> np.ndarray:
+        prods = self._product_tables(params.lits)  # (T, W)
+        masked = np.where(params.sel[..., None], prods[None, :, :], np.uint32(0))
+        out = masked[:, 0, :].copy()
+        for t in range(1, self.pit):
+            out |= masked[:, t, :]
+        return out
+
+    def instantiate(self, params: TemplateParams, name: str = "approx") -> Circuit:
+        c = Circuit.empty(self.n_inputs, name=name)
+        used = params.sel.any(axis=0)  # (T,) — only materialize used products
+        prod_nodes: dict[int, int | None] = {}
+        for t in range(self.pit):
+            if used[t]:
+                prod_nodes[t] = self._emit_product(c, params.lits[t])
+        for i in range(self.n_outputs):
+            terms = [prod_nodes[t] for t in range(self.pit) if params.sel[i, t]]
+            c.mark_output(self._emit_sum(c, terms))
+        return c
+
+    def proxies(self, params: TemplateParams) -> dict[str, int]:
+        used = params.sel.any(axis=0)
+        pit = int(used.sum())
+        its = int(params.sel.sum(axis=-1).max(initial=0))
+        return {"PIT": pit, "ITS": its}

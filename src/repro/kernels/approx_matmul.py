@@ -1,0 +1,102 @@
+"""Pallas kernel: int4 x int4 LUT matmul — bit-exact emulation of an
+approximate multiplier netlist, MXU-native.
+
+The obvious emulation of ``out[m,n] = Σ_k LUT[a[m,k], b[k,n]]`` is a gather
+per (m, k, n) — fast on a GPU's shared memory, slow on TPU.  The TPU-native
+rewrite (DESIGN.md §3) turns the LUT application into two dense
+contractions that run on the MXU:
+
+1. ``R[m, k, y] = Σ_x onehot(a)[m, k, x] · LUT[x, y]``
+   — one (bm·bk, 16) x (16, 16) matmul: R row = the LUT row of ``a[m,k]``.
+2. ``out[m, n] = Σ_{k, y} R[m, k·16+y] · O[k·16+y, n]`` with
+   ``O[k·16+y, n] = [b[k,n] == y]``
+   — one (bm, bk·16) x (bk·16, bn) matmul.
+
+Accumulation is exact in f32 (products <= 255, K <= 2^15 ⇒ sums < 2^23).
+The K dimension is tiled by the grid's sequential last axis; the f32
+accumulator lives in the output block (revisited across k steps).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, lut_ref, out_ref, *, bk: int, nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...]          # (bm, bk) int32
+    b = b_ref[...]          # (bk, bn) int32
+    lut = lut_ref[...]      # (16, 16) int32
+    bm = a.shape[0]
+    bn = b.shape[1]
+
+    # R[m, k, y] = LUT[a[m, k], y] via one-hot @ LUT (MXU contraction)
+    a_codes = jax.lax.broadcasted_iota(jnp.int32, (bm, bk, 16), 2)
+    a_oh = (a[:, :, None] == a_codes).astype(jnp.float32)
+    r = jax.lax.dot_general(
+        a_oh.reshape(bm * bk, 16),
+        lut.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(bm, bk * 16)
+    # O[(k, y), n] = [b[k, n] == y]
+    b_codes = jax.lax.broadcasted_iota(jnp.int32, (bk, 16, bn), 1)
+    b_oh = (b[:, None, :] == b_codes).astype(jnp.float32)
+    o = b_oh.reshape(bk * 16, bn)
+    acc = jax.lax.dot_general(
+        r, o, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] += acc.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def approx_matmul_pallas(
+    a: jax.Array,    # (M, K) int32 in [0, 16)
+    b: jax.Array,    # (K, N) int32 in [0, 16)
+    lut: jax.Array,  # (16, 16) int32
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = a.shape
+    _, N = b.shape
+    pm, pn, pk = (-M) % block_m, (-N) % block_n, (-K) % block_k
+    # K padding uses code 0; LUT[0, 0] may be nonzero for an approximate
+    # netlist, so mask the padded-K contribution by padding `a` with a code
+    # whose LUT row is forced to zero via a 17th virtual code — instead we
+    # simply subtract the padded contribution analytically below.
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    grid = ((M + pm) // block_m, (N + pn) // block_n, (K + pk) // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=block_k, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((16, 16), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M + pm, N + pn), jnp.int32),
+        interpret=interpret,
+    )(a, b, lut)
+    out = out[:M, :N]
+    if pk:  # remove the LUT[0,0] contribution of the K padding
+        out = out - jnp.int32(pk) * lut[0, 0]
+    return out

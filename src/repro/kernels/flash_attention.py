@@ -1,0 +1,159 @@
+"""Pallas kernel: blockwise streaming-softmax (flash) attention.
+
+Used by train/prefill steps where attention dominates FLOPs (32k prefill).
+Grid = (batch*heads, q-blocks, k-blocks) with the k axis sequential;
+running max / denominator / accumulator live in VMEM scratch and are
+renormalized per k block (the standard online-softmax recurrence).
+
+TPU-specific choices:
+* GQA is handled by the *index map* — the kv block for query-head ``h``
+  is fetched from kv-head ``h // (H / Hkv)``; grouped heads share the same
+  HBM→VMEM stream instead of materializing repeated KV.
+* Causal and sliding-window masks skip fully-masked k blocks via
+  ``pl.when`` predication (the grid still steps, but no MXU work issues).
+* Stats are kept as (bq, 128) lane-replicated tiles, the layout the VPU
+  reduces along without cross-lane shuffles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,    # (1, bq, D)
+    k_ref,    # (1, bk, D)
+    v_ref,    # (1, bk, D)
+    o_ref,    # (1, bq, D)
+    acc_ref,  # (bq, D) f32 scratch
+    m_ref,    # (bq, 128) f32 scratch
+    l_ref,    # (bq, 128) f32 scratch
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    bq: int,
+    bk: int,
+    nk: int,
+    lq: int,
+    lk: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # query positions are aligned to the *end* of the kv sequence (kv prefix)
+    offs = lk - lq
+    q_lo = iq * bq + offs
+    k_lo = ik * bk
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= k_lo <= q_lo + bq - 1
+    if window is not None:
+        relevant &= k_lo + bk - 1 > q_lo - window
+
+    @pl.when(relevant)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)              # (bq, D)
+        k = k_ref[0].astype(jnp.float32)              # (bk, D)
+        v = v_ref[0].astype(jnp.float32)              # (bk, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                      # (bq, bk)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[:, 0:1]                         # (bq, 1)
+        m_cur = logits.max(axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)                    # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_new = corr * l_ref[:, 0:1] + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[:, 0:1]
+        denom = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, H, Lq, D)
+    k: jax.Array,  # (B, Hkv, Lk, D)
+    v: jax.Array,  # (B, Hkv, Lk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Lq, D = q.shape
+    _, Hkv, Lk, _ = k.shape
+    rep = H // Hkv
+    if scale is None:
+        scale = float(1.0 / np.sqrt(D))
+    bq = min(block_q, Lq)
+    bk = min(block_k, Lk)
+    assert Lq % bq == 0 and Lk % bk == 0, "pad sequence to block multiples"
+    nq, nk = Lq // bq, Lk // bk
+
+    qf = q.reshape(B * H, Lq, D)
+    kf = k.reshape(B * Hkv, Lk, D)
+    vf = v.reshape(B * Hkv, Lk, D)
+
+    def kv_index(b, i, kblk):
+        return ((b // H) * Hkv + (b % H) // rep, kblk, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            scale=scale, causal=causal, window=window,
+            bq=bq, bk=bk, nk=nk, lq=Lq, lk=Lk,
+        ),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, kblk: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, kblk: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Lq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Lq, D)

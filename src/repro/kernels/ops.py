@@ -1,0 +1,62 @@
+"""Public jit'd wrappers for the Pallas kernels, with backend dispatch.
+
+``backend='auto'`` picks the Pallas kernel on TPU and the pure-jnp oracle
+(:mod:`repro.kernels.ref`) elsewhere — interpret-mode Pallas is for
+*validation*, not production CPU execution.  Tests exercise both paths and
+assert they agree.
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .approx_matmul import approx_matmul_pallas
+from .flash_attention import flash_attention_pallas
+from .template_eval import template_eval_pallas
+
+Backend = Literal["auto", "pallas", "pallas_interpret", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: Backend) -> str:
+    if backend != "auto":
+        return backend
+    return "pallas" if _on_tpu() else "ref"
+
+
+def template_eval(lits, sel, in_tt, exact_vals, *, backend: Backend = "auto"):
+    """Population worst-case-error; see :func:`repro.kernels.ref.template_eval`."""
+    b = _resolve(backend)
+    if b == "ref":
+        return ref.template_eval(lits, sel, in_tt, exact_vals)
+    return template_eval_pallas(
+        lits, sel, in_tt, exact_vals, interpret=(b == "pallas_interpret")
+    )
+
+
+def approx_matmul(a, b, lut, *, backend: Backend = "auto"):
+    """LUT matmul; see :func:`repro.kernels.ref.approx_matmul`."""
+    bk = _resolve(backend)
+    if bk == "ref":
+        return ref.approx_matmul(a, b, lut)
+    return approx_matmul_pallas(a, b, lut, interpret=(bk == "pallas_interpret"))
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window=None, scale=None, backend: Backend = "auto"
+):
+    """Blockwise attention; see :func:`repro.kernels.ref.flash_attention`."""
+    b = _resolve(backend)
+    if b == "ref":
+        return ref.flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        interpret=(b == "pallas_interpret"),
+    )

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the *semantic definition*; the Pallas kernels are
+checked against these in ``tests/test_kernels_*.py`` (shape/dtype sweeps,
+``interpret=True`` on CPU).  They are also the CPU fallback used by
+:mod:`repro.kernels.ops` when not running on TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ALL_ONES = jnp.uint32(0xFFFFFFFF)
+USE, NEG, IGNORE = 0, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# template_eval — population worst-case-error of shared-template candidates
+# ---------------------------------------------------------------------------
+def template_eval(
+    lits: jax.Array,        # (P, T, n) int32 in {USE, NEG, IGNORE}
+    sel: jax.Array,         # (P, m, T) int32 in {0, 1}
+    in_tt: jax.Array,       # (n, W) uint32 — packed input truth tables
+    exact_vals: jax.Array,  # (S,) int32 — exact value per assignment
+) -> tuple[jax.Array, jax.Array]:  # (P,) worst-case error, (P,) total error
+    P, T, n = lits.shape
+    m = sel.shape[1]
+    W = in_tt.shape[1]
+    S = exact_vals.shape[0]
+
+    tt = in_tt[None, None, :, :]  # (1, 1, n, W)
+    use_term = jnp.where((lits == USE)[..., None], tt, ALL_ONES)
+    neg_term = jnp.where((lits == NEG)[..., None], ~tt, ALL_ONES)
+    comb = use_term & neg_term                       # (P, T, n, W)
+    prods = comb[:, :, 0, :]
+    for j in range(1, n):
+        prods = prods & comb[:, :, j, :]             # (P, T, W)
+
+    masked = jnp.where(sel[..., None].astype(bool), prods[:, None, :, :], jnp.uint32(0))
+    outs = masked[:, :, 0, :]
+    for t in range(1, T):
+        outs = outs | masked[:, :, t, :]             # (P, m, W)
+
+    # unpack to per-assignment values and take the worst-case error
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (outs[..., None] >> shifts[None, None, None, :]) & jnp.uint32(1)
+    bits = bits.reshape(P, m, W * 32)[:, :, :S].astype(jnp.int32)   # (P, m, S)
+    weights = (jnp.int32(1) << jnp.arange(m, dtype=jnp.int32))[None, :, None]
+    vals = (bits * weights).sum(axis=1)              # (P, S)
+    err = jnp.abs(vals - exact_vals[None, :])
+    return err.max(axis=1), err.sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# approx_matmul — int4 x int4 LUT matmul (bit-exact emulation of an
+# approximate multiplier netlist; LUT[a, b] = netlist(a, b))
+# ---------------------------------------------------------------------------
+def approx_matmul(
+    a: jax.Array,     # (M, K) int32, values in [0, 16)
+    b: jax.Array,     # (K, N) int32, values in [0, 16)
+    lut: jax.Array,   # (16, 16) int32 — approximate product table
+) -> jax.Array:       # (M, N) int32 — sum_k LUT[a[m,k], b[k,n]]
+    prods = lut[a[:, :, None], b[None, :, :]]        # (M, K, N)
+    return prods.sum(axis=1, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention — causal streaming-softmax attention oracle
+# ---------------------------------------------------------------------------
+def flash_attention(
+    q: jax.Array,  # (B, H, Lq, D)
+    k: jax.Array,  # (B, Hkv, Lk, D)
+    v: jax.Array,  # (B, Hkv, Lk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    B, H, Lq, D = q.shape
+    Hkv = k.shape[1]
+    if scale is None:
+        scale = 1.0 / np.sqrt(D)
+    if Hkv != H:  # GQA: expand kv heads
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qi = jnp.arange(Lq)[:, None] + (k.shape[2] - Lq)  # align ends (kv prefix)
+    ki = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Lq, k.shape[2]), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v).astype(q.dtype)

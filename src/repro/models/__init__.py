@@ -1,0 +1,42 @@
+"""Model zoo public API: family-dispatched init / forward / loss / decode."""
+
+from __future__ import annotations
+
+from . import encdec, lm
+from .config import SHAPES, ModelConfig, ShapeConfig
+
+
+def init_model(cfg: ModelConfig, key):
+    if cfg.family == "audio":
+        return encdec.init_encdec(cfg, key)
+    return lm.init_lm(cfg, key)
+
+
+def loss_fn(cfg: ModelConfig):
+    return encdec.encdec_loss if cfg.family == "audio" else lm.lm_loss
+
+
+def forward_fn(cfg: ModelConfig):
+    return encdec.forward_encdec if cfg.family == "audio" else lm.forward_lm
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    if cfg.family == "audio":
+        return encdec.init_encdec_caches(cfg, batch, seq_len)
+    return lm.init_decode_caches(cfg, batch, seq_len)
+
+
+def decode_fn(cfg: ModelConfig):
+    return encdec.decode_step_encdec if cfg.family == "audio" else lm.decode_step
+
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "init_model",
+    "loss_fn",
+    "forward_fn",
+    "init_caches",
+    "decode_fn",
+]

@@ -1,0 +1,312 @@
+"""Decoder-only language model: init / forward / decode for every family.
+
+Design notes (DESIGN.md §5, §7):
+
+* **Scan-over-layers** for train/prefill: per-layer params are stacked on a
+  leading axis and the block body is traced once — HLO size is O(1) in
+  depth, which matters both for the 1-core CPU here and for real compile
+  times at 1000+ nodes.  Per-layer heterogeneity (gemma3 local/global,
+  hymba's periodic global layers) rides through the scan as a traced
+  per-layer window scalar (``-1`` = global).
+* **Python loop over layers** for decode: caches are *heterogeneous*
+  (ring buffers for sliding-window layers, full-length for global layers,
+  recurrent states for SSM/RWKV), so each layer owns its own cache pytree
+  and the loop unrolls — decode graphs are small.
+* MoE aux (load-balance) losses accumulate through the scan carry.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel import shard
+from .config import ModelConfig
+from . import layers as L
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-layer window schedule
+# ---------------------------------------------------------------------------
+def window_schedule(cfg: ModelConfig) -> np.ndarray | int | None:
+    """None = all-global; int = uniform window; array (L,) = per-layer
+    (-1 marks a global layer)."""
+    if cfg.local_global_every is not None:
+        win = np.full((cfg.n_layers,), cfg.local_window, dtype=np.int32)
+        win[cfg.local_global_every - 1 :: cfg.local_global_every] = -1
+        return win
+    if cfg.sliding_window is not None:
+        return int(cfg.sliding_window)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(cfg: ModelConfig, key) -> Params:
+    ks = list(jax.random.split(key, 4))
+    dt = cfg.jnp_dtype
+    p: Params = {"ln1": jnp.zeros((cfg.d_model,), dt), "ln2": jnp.zeros((cfg.d_model,), dt)}
+    if cfg.rwkv is not None:
+        p["rwkv"] = L.init_rwkv(cfg, ks[0])
+        return p
+    if cfg.mla is not None:
+        p["attn"] = L.init_mla(cfg, ks[0])
+    else:
+        p["attn"] = L.init_attention(cfg, ks[0])
+    if cfg.ssm is not None:
+        p["ssm"] = L.init_ssm(cfg, ks[1])
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(cfg, ks[2])
+    else:
+        p["ffn"] = L.init_ffn(cfg, ks[3])
+    return p
+
+
+def init_lm(cfg: ModelConfig, key) -> Params:
+    ks = list(jax.random.split(key, cfg.n_layers + 3))
+    dt = cfg.jnp_dtype
+    per_layer = [_init_layer(cfg, ks[i]) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    params: Params = {
+        "embed": L._dense_init(ks[-1], (cfg.vocab_size, cfg.d_model), dt, fan_in=cfg.d_model),
+        "layers": stacked,
+        "ln_f": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(ks[-2], (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.vision is not None:
+        params["vis_proj"] = L._dense_init(
+            ks[-3], (cfg.vision.d_vision, cfg.d_model), dt
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# one transformer block (full-sequence mode)
+# ---------------------------------------------------------------------------
+def _block_full(cfg: ModelConfig, lp: Params, x, window, lut, backend):
+    if cfg.rwkv is not None:
+        h, _ = L.rwkv_time_mix(cfg, lp["rwkv"], L.rmsnorm(x, lp["ln1"], cfg.norm_eps))
+        x = x + h
+        h, _ = L.rwkv_channel_mix(cfg, lp["rwkv"], L.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return x + h, jnp.float32(0.0)
+
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        attn_out = L.mla_attention_full(cfg, lp["attn"], h)
+    else:
+        attn_out = L.attention_full(cfg, lp["attn"], h, window, backend=backend)
+    if cfg.ssm is not None:  # hybrid: parallel SSM head fused with attention
+        ssm_out, _ = L.ssm_mix(cfg, lp["ssm"], h)
+        attn_out = 0.5 * (attn_out + ssm_out)
+    x = x + attn_out
+
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        mlp_out, aux = L.moe_ffn(cfg, lp["moe"], h, lut)
+    else:
+        mlp_out, aux = L.ffn(cfg, lp["ffn"], h, lut), jnp.float32(0.0)
+    return x + mlp_out, aux
+
+
+def forward_lm(
+    cfg: ModelConfig,
+    params: Params,
+    batch: dict[str, jax.Array],
+    *,
+    lut: jax.Array | None = None,
+    backend: str = "auto",
+    remat: str = "none",
+    scan_unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Teacher-forced forward.  Returns (logits (B, S_total, V), aux_loss).
+
+    ``batch['tokens']``: (B, S) int32.  VLM batches add ``'patches'``
+    (B, P, d_vision) which are projected and prepended.
+    ``scan_unroll``: unroll the layer scan — used by the roofline analysis
+    (XLA cost_analysis counts a rolled scan body once; see dryrun.py).
+    """
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(cfg.jnp_dtype)
+    if cfg.vision is not None:
+        pv = jnp.einsum("bpd,dm->bpm", batch["patches"].astype(cfg.jnp_dtype),
+                        params["vis_proj"])
+        x = jnp.concatenate([pv, x], axis=1)
+    x = shard(x, "batch", None, None)
+
+    win = window_schedule(cfg)
+    lut_ = lut if cfg.approx_mlp else None
+
+    def body(carry, scanned):
+        x, aux = carry
+        if isinstance(win, np.ndarray):
+            lp, w = scanned
+        else:
+            lp, w = scanned, win
+        x, aux_i = _block_full(cfg, lp, x, w, lut_, backend)
+        x = shard(x, "batch", None, None)
+        return (x, aux + aux_i), None
+
+    if remat != "none":
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if remat == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (params["layers"], jnp.asarray(win)) if isinstance(win, np.ndarray) else params["layers"]
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), xs, unroll=True if scan_unroll else 1
+    )
+
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    logits = shard(logits, "batch", None, "model")
+    return logits, aux
+
+
+def lm_loss(cfg, params, batch, *, lut=None, backend="auto", remat="none",
+            scan_unroll=False):
+    """Next-token cross-entropy (text positions only for VLM)."""
+    logits, aux = forward_lm(cfg, params, batch, lut=lut, backend=backend,
+                             remat=remat, scan_unroll=scan_unroll)
+    tokens = batch["tokens"]
+    n_prefix = cfg.vision.n_patches if cfg.vision is not None else 0
+    logits_text = logits[:, n_prefix:, :]
+    pred = logits_text[:, :-1]
+    tgt = tokens[:, 1:]
+    logp = jax.nn.log_softmax(pred, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux
+
+
+# ---------------------------------------------------------------------------
+# decode: heterogeneous per-layer caches, Python loop over layers
+# ---------------------------------------------------------------------------
+def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int) -> list[Params]:
+    """One cache pytree per layer, sized by that layer's attention kind."""
+    win = window_schedule(cfg)
+    dt = cfg.jnp_dtype
+    caches: list[Params] = []
+    for layer in range(cfg.n_layers):
+        c: Params = {}
+        if cfg.rwkv is not None:
+            rw = cfg.rwkv
+            H = cfg.d_model // rw.head_dim
+            c["x_tm"] = jnp.zeros((batch, 1, cfg.d_model), dt)
+            c["x_cm"] = jnp.zeros((batch, 1, cfg.d_model), dt)
+            c["wkv"] = jnp.zeros((batch, H, rw.head_dim, rw.head_dim), jnp.float32)
+            caches.append(c)
+            continue
+        if cfg.mla is not None:
+            mla = cfg.mla
+            c["ckv"] = jnp.zeros((batch, seq_len, mla.kv_lora_rank), dt)
+            c["kr"] = jnp.zeros((batch, seq_len, mla.qk_rope_head_dim), dt)
+        else:
+            if isinstance(win, np.ndarray):
+                w = int(win[layer])
+                slots = seq_len if w < 0 else min(w, seq_len)
+            elif isinstance(win, int):
+                slots = min(win, seq_len)
+            else:
+                slots = seq_len
+            c["k"] = jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.hd), dt)
+            c["v"] = jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.hd), dt)
+        if cfg.ssm is not None:
+            sm = cfg.ssm
+            di = sm.d_inner or cfg.d_model
+            c["ssm"] = jnp.zeros((batch, di, sm.state_dim), jnp.float32)
+        caches.append(c)
+    return caches
+
+
+def shard_decode_caches(caches: list[Params], cfg: ModelConfig) -> list[Params]:
+    """Apply logical sharding to caches: batch over data when divisible,
+    else context-parallel over the cache-sequence axis (long_500k, B=1)."""
+    out = []
+    for c in caches:
+        sc = dict(c)
+        for name in ("k", "v"):
+            if name in sc:
+                sc[name] = shard(sc[name], "batch", "cache_seq", "model", None)
+        if "ckv" in sc:
+            sc["ckv"] = shard(sc["ckv"], "batch", "cache_seq", "model")
+            sc["kr"] = shard(sc["kr"], "batch", "cache_seq", None)
+        if "ssm" in sc:
+            sc["ssm"] = shard(sc["ssm"], "batch", "model", None)
+        if "wkv" in sc:
+            sc["wkv"] = shard(sc["wkv"], "batch", "model", None, None)
+        out.append(sc)
+    return out
+
+
+def _block_decode(cfg: ModelConfig, lp: Params, x, cache: Params, pos, window):
+    new_cache = dict(cache)
+    if cfg.rwkv is not None:
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        h_in = jnp.concatenate([cache["x_tm"], h], axis=1)  # token-shift via state
+        out, (x_tm, wkv) = L.rwkv_time_mix(
+            cfg, lp["rwkv"], h, state=(cache["x_tm"], cache["wkv"])
+        )
+        x = x + out
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        out, x_cm = L.rwkv_channel_mix(cfg, lp["rwkv"], h, x_last=cache["x_cm"])
+        new_cache.update(x_tm=x_tm, wkv=wkv, x_cm=x_cm)
+        return x + out, new_cache
+
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        attn_out, upd = L.mla_attention_decode(cfg, lp["attn"], h, cache, pos)
+    else:
+        attn_out, upd = L.attention_decode(cfg, lp["attn"], h, cache, pos, window)
+    new_cache.update(upd)
+    if cfg.ssm is not None:
+        ssm_out, s = L.ssm_mix(cfg, lp["ssm"], h, state=cache["ssm"])
+        new_cache["ssm"] = s
+        attn_out = 0.5 * (attn_out + ssm_out)
+    x = x + attn_out
+
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        mlp_out, _ = L.moe_ffn(cfg, lp["moe"], h, dropless=True)
+    else:
+        mlp_out = L.ffn(cfg, lp["ffn"], h)
+    return x + mlp_out, new_cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    caches: list[Params],
+    tokens: jax.Array,   # (B, 1) int32 — the newest token
+    pos: jax.Array,      # () int32 — its absolute position
+) -> tuple[jax.Array, list[Params]]:
+    """One serving step: append token at ``pos``, return next-token logits."""
+    win = window_schedule(cfg)
+    x = params["embed"][tokens].astype(cfg.jnp_dtype)
+    x = shard(x, "batch", None, None)
+    new_caches: list[Params] = []
+    layer_params = [
+        jax.tree.map(lambda a, i=i: a[i], params["layers"])
+        for i in range(cfg.n_layers)
+    ]
+    for i, (lp, cache) in enumerate(zip(layer_params, caches)):
+        if isinstance(win, np.ndarray):
+            w = int(win[i])
+            w = None if w < 0 else w
+        else:
+            w = win
+        x, nc = _block_decode(cfg, lp, x, cache, pos, w)
+        new_caches.append(nc)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)[:, 0]
+    return logits, new_caches

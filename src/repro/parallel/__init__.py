@@ -1,0 +1,17 @@
+from .api import (
+    ShardingContext,
+    activate,
+    axis_extent,
+    current,
+    shard,
+    spec_for_logical,
+)
+
+__all__ = [
+    "ShardingContext",
+    "activate",
+    "axis_extent",
+    "current",
+    "shard",
+    "spec_for_logical",
+]

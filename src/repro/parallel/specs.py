@@ -1,0 +1,147 @@
+"""Parameter / batch / cache PartitionSpec resolution.
+
+Weight sharding follows the 2-D scheme (DESIGN.md §7): the TP dimension
+(heads / ffn / vocab) shards over ``model``; the other large dimension
+shards over ``data`` (FSDP / ZeRO-3 — GSPMD inserts the weight
+all-gathers in forward and reduce-scatters in backward).  Optimizer
+moments inherit the parameter specs, so optimizer state is fully
+distributed.  Every rule passes through the divisibility guard in
+:class:`repro.parallel.api.ShardingContext` — a dimension that does not
+divide falls back to replication (e.g. whisper's 51865 vocab).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeConfig
+from .api import ShardingContext
+
+# leaf-name -> logical axes, by array rank.  'F' = fsdp(data), 'M' = model.
+_IN_OUT = ("fsdp", "model")    # (d_in, d_out) projections
+_OUT_IN = ("model", "fsdp")    # (d_out, d_in) / second projections
+_BY_NAME: dict[str, tuple[str | None, ...]] = {
+    "embed": ("model", "fsdp"),       # (vocab, d_model)
+    "lm_head": _IN_OUT,               # (d_model, vocab)
+    "wq": _IN_OUT, "wk": _IN_OUT, "wv": _IN_OUT, "wg": _IN_OUT,
+    "wr": _IN_OUT, "ck": _IN_OUT, "cr": _IN_OUT, "win": _IN_OUT,
+    "wdkv": _IN_OUT, "wuk": _IN_OUT, "wuv": _IN_OUT,
+    "w1": _IN_OUT, "w3": _IN_OUT, "w_a": _IN_OUT, "wdt1": _IN_OUT,
+    "wB": _IN_OUT, "wC": _IN_OUT,
+    "wo": _OUT_IN, "w2": _OUT_IN, "cv": _OUT_IN, "wout": _OUT_IN,
+    "w_b": _OUT_IN, "wdt2": _OUT_IN,
+    "router": ("fsdp", None),
+    "vis_proj": (None, "fsdp"),
+}
+# MoE expert stacks: expert-parallel (E over data) when E divides the data
+# extent — expert compute then needs zero weight collectives and dispatch
+# becomes the classic MoE all-to-all; otherwise FSDP over the d_model dim.
+_MOE_3D_EP = {"w1": ("expert_fsdp", None, "model"),
+              "w3": ("expert_fsdp", None, "model"),
+              "w2": ("expert_fsdp", "model", None)}
+_MOE_3D = {"w1": (None, "fsdp", "model"), "w3": (None, "fsdp", "model"),
+           "w2": (None, "model", "fsdp")}
+
+
+def param_specs(ctx: ShardingContext, params_shapes: Any) -> Any:
+    """ShapeDtypeStruct tree -> PartitionSpec tree (same structure)."""
+
+    def resolve(path, leaf) -> P:
+        names = [
+            p.key for p in path
+            if isinstance(p, (jax.tree_util.DictKey,))
+        ]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        if len(shape) < 2:
+            return P()
+        # scan-stacked layer params carry a leading L axis -> prepend None
+        lead = ()
+        core_shape = shape
+        if "layers" in names or "enc_layers" in names or "dec_layers" in names:
+            lead = (None,)
+            core_shape = shape[1:]
+        if len(core_shape) == 3 and name in _MOE_3D:
+            ep_extent = 1
+            for a in ctx.rules.get("expert_fsdp", ()):
+                if a in ctx.mesh.axis_names:
+                    ep_extent *= ctx.mesh.shape[a]
+            ep = ep_extent > 1 and core_shape[0] % ep_extent == 0
+            axes = (_MOE_3D_EP if ep else _MOE_3D)[name]
+        elif name in _BY_NAME and len(core_shape) == len(_BY_NAME[name]):
+            axes = _BY_NAME[name]
+        elif len(core_shape) >= 2:
+            axes = ("fsdp", "model") + (None,) * (len(core_shape) - 2)
+        else:
+            axes = (None,) * len(core_shape)
+        spec = ctx.resolve(core_shape, axes)
+        return P(*lead, *spec)
+
+    return jax.tree_util.tree_map_with_path(resolve, params_shapes)
+
+
+def opt_specs(ctx: ShardingContext, params_shapes: Any, p_specs: Any) -> dict:
+    """Optimizer state mirrors the parameter specs (f32 moments)."""
+    return {
+        "mu": p_specs,
+        "nu": p_specs,
+        "step": P(),
+    }
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardingContext) -> dict:
+    dp = "batch"
+    out: dict[str, P] = {}
+    if shape.kind == "decode":
+        out["tokens"] = ctx.resolve((shape.global_batch, 1), (dp, None))
+    else:
+        out["tokens"] = ctx.resolve((shape.global_batch, shape.seq_len), (dp, None))
+    if cfg.family == "audio" and shape.kind != "decode":
+        out["frames"] = ctx.resolve(
+            (shape.global_batch, cfg.encoder.n_frames, cfg.d_model), (dp, None, None)
+        )
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["patches"] = ctx.resolve(
+            (shape.global_batch, cfg.vision.n_patches, cfg.vision.d_vision),
+            (dp, None, None),
+        )
+    return out
+
+
+def cache_specs(cfg: ModelConfig, caches_shapes: list, ctx: ShardingContext) -> list:
+    """Decode-cache specs: batch over data when divisible; otherwise the
+    cache sequence axis goes context-parallel over data (long_500k, B=1)."""
+
+    def one(cache_shapes: dict) -> dict:
+        specs = {}
+        for k, leaf in cache_shapes.items():
+            shape = leaf.shape
+            batch_div = ctx.resolve((shape[0],), ("batch",))[0] is not None
+            seq_name = None if batch_div else "cache_seq"
+            if k in ("k", "v", "xk", "xv"):
+                specs[k] = ctx.resolve(shape, ("batch", seq_name, "model", None))
+            elif k == "ckv":
+                specs[k] = ctx.resolve(shape, ("batch", seq_name, "model"))
+            elif k == "kr":
+                specs[k] = ctx.resolve(shape, ("batch", seq_name, None))
+            elif k == "ssm":
+                specs[k] = ctx.resolve(shape, ("batch", "model", None))
+            elif k == "wkv":
+                specs[k] = ctx.resolve(shape, ("batch", "model", None, None))
+            else:  # x_tm / x_cm and other small states
+                specs[k] = ctx.resolve(shape, ("batch",) + (None,) * (len(shape) - 1))
+        return specs
+
+    return [one(c) for c in caches_shapes]
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,4 @@
+from .lut import build_lut, exact_mul_lut
+from .int4 import quantize_int4, approx_linear, dequantize
+
+__all__ = ["build_lut", "exact_mul_lut", "quantize_int4", "approx_linear", "dequantize"]

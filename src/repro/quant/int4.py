@@ -1,0 +1,61 @@
+"""Symmetric int4 quantization + approximate-multiplier linear layers.
+
+Signed int4 activations/weights run on an *unsigned* 4x4 approximate
+multiplier via the exact shift decomposition::
+
+    (a' - 8)(b' - 8) = a'b' - 8 a' - 8 b' + 64,   a', b' in [0, 16)
+
+Only the ``a'b'`` term goes through the (approximate) multiplier; the
+correction terms are exact adder work — on real silicon these are the
+cheap operators, and in emulation they are exact integer sums.  This is
+how edge NN inference actually deploys the paper's unsigned multipliers
+for signed tensors (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+
+
+def quantize_int4(x: jax.Array, axis: int = -1) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-slice int4: returns (codes in [0,16), scale).
+
+    ``x ≈ (codes - 8) * scale``; codes are biased-unsigned for the LUT.
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 7.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -7, 7).astype(jnp.int32) + 8
+    return q, scale
+
+
+def dequantize(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return (codes.astype(jnp.float32) - 8.0) * scale
+
+
+def approx_linear(
+    x: jax.Array,     # (..., K) float
+    w: jax.Array,     # (K, N) float
+    lut: jax.Array,   # (16, 16) int32 approximate product table
+    *,
+    backend: str = "auto",
+) -> jax.Array:
+    """``x @ w`` through the approximate 4-bit multiplier, bit-exact emulation.
+
+    Per-row activation scales, per-column weight scales (standard W4A4).
+    """
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    xq, sx = quantize_int4(x2, axis=-1)          # (M, K), (M, 1)
+    wq, sw = quantize_int4(w, axis=0)            # (K, N), (1, N)
+
+    raw = ops.approx_matmul(xq, wq, lut, backend=backend).astype(jnp.float32)
+    # exact correction of the biased-unsigned decomposition
+    sum_a = xq.sum(axis=1, keepdims=True).astype(jnp.float32)   # (M, 1)
+    sum_b = wq.sum(axis=0, keepdims=True).astype(jnp.float32)   # (1, N)
+    corrected = raw - 8.0 * sum_a - 8.0 * sum_b + 64.0 * K
+    out = corrected * sx * sw
+    return out.reshape(*lead, w.shape[1]).astype(x.dtype)

@@ -1,0 +1,34 @@
+"""LUT construction: approximate multiplier netlist -> (16, 16) table.
+
+This is the bridge from Layer A (ALS) to Layer B (at-scale emulation):
+whatever circuit the search produced, its full behaviour over 4-bit
+operands is a 256-entry table, which the Pallas ``approx_matmul`` kernel
+then applies bit-exactly inside model matmuls.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.circuits import Circuit
+
+
+def build_lut(mult_circuit: Circuit) -> np.ndarray:
+    """Evaluate a 4x4-bit multiplier circuit into a (16, 16) int32 LUT.
+
+    Input convention follows :mod:`repro.core.arith`: inputs are
+    ``[a0..a3, b0..b3]`` LSB-first, so assignment index = a + 16*b.
+    """
+    assert mult_circuit.n_inputs == 8, "expects a 4-bit multiplier (8 inputs)"
+    vals = mult_circuit.eval_words().astype(np.int32)  # (256,)
+    lut = np.zeros((16, 16), dtype=np.int32)
+    for b in range(16):
+        for a in range(16):
+            lut[a, b] = vals[a + 16 * b]
+    return lut
+
+
+def exact_mul_lut() -> np.ndarray:
+    """The exact 4-bit product table (baseline for error measurements)."""
+    a = np.arange(16, dtype=np.int32)
+    return a[:, None] * a[None, :]

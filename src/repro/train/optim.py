@@ -1,0 +1,80 @@
+"""AdamW with decoupled weight decay, cosine schedule, global-norm clipping.
+
+Implemented directly on pytrees (no optax dependency).  Optimizer moments
+are f32 regardless of param dtype; under the sharding rules the moments
+inherit the parameter specs, so optimizer state is fully sharded
+(ZeRO-style) across ``data`` x ``model``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init_opt_state(params) -> dict[str, Any]:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"mu": zeros(params), "nu": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return (
+        new_p,
+        {"mu": new_mu, "nu": new_nu, "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

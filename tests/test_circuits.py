@@ -1,0 +1,72 @@
+"""Circuit IR + exact arithmetic generators."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arith import BENCHMARKS, benchmark, reference_values
+from repro.core.circuits import (
+    Circuit, Op, check_topological, input_truth_tables, pack_bits, unpack_bits,
+)
+
+
+@pytest.mark.parametrize("name", BENCHMARKS)
+def test_exact_circuits_match_arithmetic(name):
+    c = benchmark(name)
+    assert check_topological(c)
+    assert np.array_equal(c.eval_words(), reference_values(name))
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 6, 8])
+def test_pack_unpack_roundtrip(n, rng):
+    bits = rng.random((3, 1 << n)) < 0.5
+    assert np.array_equal(unpack_bits(pack_bits(bits), 1 << n), bits)
+
+
+def test_input_truth_tables_bit_convention():
+    tts = input_truth_tables(3)
+    bits = unpack_bits(tts, 8)  # (3, 8)
+    for i in range(8):
+        for j in range(3):
+            assert bits[j, i] == bool((i >> j) & 1)
+
+
+@given(st.integers(min_value=1, max_value=4), st.randoms())
+@settings(max_examples=25, deadline=None)
+def test_random_circuit_eval_matches_python(bits_n, pyrandom):
+    """Property: bit-packed eval == naive per-assignment interpretation."""
+    n = 2 * bits_n
+    c = Circuit.empty(n, "rand")
+    ops = [Op.AND, Op.OR, Op.XOR, Op.NOT, Op.NAND, Op.NOR]
+    for _ in range(12):
+        op = pyrandom.choice(ops)
+        k = 1 if op is Op.NOT else 2
+        args = [pyrandom.randrange(len(c.nodes)) for _ in range(k)]
+        c.add(op, *args)
+    for _ in range(3):
+        c.mark_output(pyrandom.randrange(len(c.nodes)))
+
+    words = c.eval_words()
+
+    def naive(assignment):
+        vals = {}
+        for i, g in enumerate(c.nodes):
+            a = [vals[x] for x in g.args]
+            if g.op is Op.INPUT:
+                vals[i] = bool((assignment >> i) & 1)
+            elif g.op is Op.AND:
+                vals[i] = all(a)
+            elif g.op is Op.OR:
+                vals[i] = any(a)
+            elif g.op is Op.XOR:
+                vals[i] = a[0] ^ a[1]
+            elif g.op is Op.NOT:
+                vals[i] = not a[0]
+            elif g.op is Op.NAND:
+                vals[i] = not all(a)
+            elif g.op is Op.NOR:
+                vals[i] = not any(a)
+        return sum(int(vals[o]) << k for k, o in enumerate(c.outputs))
+
+    for assignment in range(1 << n):
+        assert naive(assignment) == int(words[assignment])

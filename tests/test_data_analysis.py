@@ -1,0 +1,65 @@
+"""Data-pipeline determinism + HLO collective-parser unit tests."""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.analysis import _group_size, _shape_bytes, collective_stats
+from repro.train.data import DataState, next_batch, synth_batch
+
+
+def test_pipeline_is_deterministic_per_step():
+    cfg = get_config("stablelm-1.6b", reduced=True)
+    a = synth_batch(cfg, 4, 32, DataState(seed=7, step=3))
+    b = synth_batch(cfg, 4, 32, DataState(seed=7, step=3))
+    c = synth_batch(cfg, 4, 32, DataState(seed=7, step=4))
+    assert np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_next_batch_advances_state():
+    cfg = get_config("stablelm-1.6b", reduced=True)
+    _, st = next_batch(cfg, 2, 8, DataState(seed=0, step=0))
+    assert st.step == 1
+
+
+def test_tokens_in_vocab():
+    cfg = get_config("stablelm-1.6b", reduced=True)
+    batch = synth_batch(cfg, 8, 64, DataState(seed=1, step=0))
+    toks = np.asarray(batch["tokens"])
+    assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+
+
+# --------------------------------------------------------------------- HLO
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,128]") == 16 * 128 * 2
+    assert _shape_bytes("f32[4,4]") == 64
+    assert _shape_bytes("(bf16[8], f32[2,2])") == 16 + 16
+
+
+def test_group_size_formats():
+    assert _group_size("... replica_groups=[16,16]<=[256] ...") == 16
+    assert _group_size("... replica_groups={{0,1,2,3}} ...") == 4
+
+
+def test_collective_stats_parsing():
+    hlo = """
+  %ag = bf16[32,128]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[64]{0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %cp = f32[8]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    stats = collective_stats(hlo)
+    assert stats.counts == {"all-gather": 1, "all-reduce": 1, "collective-permute": 1}
+    ag_payload = 32 * 128 * 2
+    assert stats.payload_bytes["all-gather"] == ag_payload
+    # ring wire: (g-1)/g * payload for AG, 2*(g-1)/g for AR, payload for CP
+    want = (15 / 16) * ag_payload + 2 * (3 / 4) * 256 + 32
+    assert abs(stats.wire_bytes_total - want) < 1e-6
+
+
+def test_async_pairs_counted_once():
+    hlo = """
+  %s = bf16[128]{0} all-gather-start(%x), replica_groups=[2,128]<=[256]
+  %d = bf16[128]{0} all-gather-done(%s)
+"""
+    stats = collective_stats(hlo)
+    assert stats.counts == {"all-gather": 1}

@@ -1,0 +1,59 @@
+"""Pallas approx_matmul (bitplane/one-hot MXU formulation) vs gather oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.quant import approx_linear, build_lut, exact_mul_lut, quantize_int4
+from repro.core.arith import benchmark
+
+
+@pytest.mark.parametrize("M,K,N", [
+    (8, 16, 8),
+    (37, 53, 29),       # awkward shapes -> padding paths
+    (128, 128, 128),    # exact block fit
+    (130, 257, 64),
+])
+def test_matches_gather_oracle(M, K, N, rng):
+    lut = rng.integers(0, 226, size=(16, 16)).astype(np.int32)
+    a = rng.integers(0, 16, size=(M, K)).astype(np.int32)
+    b = rng.integers(0, 16, size=(K, N)).astype(np.int32)
+    gt = lut[a[:, :, None], b[None, :, :]].sum(axis=1)
+    o_ref = np.asarray(ref.approx_matmul(jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut)))
+    o_pal = np.asarray(ops.approx_matmul(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut),
+        backend="pallas_interpret"))
+    assert np.array_equal(o_ref, gt)
+    assert np.array_equal(o_pal, gt)
+
+
+def test_exact_lut_reproduces_int_matmul(rng):
+    """With the exact product table, the LUT matmul IS an int matmul."""
+    lut = exact_mul_lut()
+    a = rng.integers(0, 16, size=(24, 48)).astype(np.int32)
+    b = rng.integers(0, 16, size=(48, 16)).astype(np.int32)
+    out = np.asarray(ops.approx_matmul(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut), backend="ref"))
+    assert np.array_equal(out, a @ b)
+
+
+def test_lut_built_from_exact_circuit_is_exact():
+    lut = build_lut(benchmark("mul_i8"))
+    assert np.array_equal(lut, exact_mul_lut())
+
+
+def test_approx_linear_signed_decomposition(rng):
+    """Signed int4 x int4 through the unsigned multiplier + exact correction
+    equals the plain quantized matmul when the LUT is exact."""
+    x = rng.standard_normal((5, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 7)).astype(np.float32)
+    lut = jnp.asarray(exact_mul_lut())
+    got = np.asarray(approx_linear(jnp.asarray(x), jnp.asarray(w), lut, backend="ref"))
+    xq, sx = quantize_int4(jnp.asarray(x), axis=-1)
+    wq, sw = quantize_int4(jnp.asarray(w), axis=0)
+    want = np.asarray(
+        ((np.asarray(xq) - 8) @ (np.asarray(wq) - 8)).astype(np.float32)
+        * np.asarray(sx) * np.asarray(sw)
+    )
+    assert np.allclose(got, want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,68 @@
+"""Miter soundness: Z3 models and exhaustive checks must agree."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arith import benchmark
+from repro.core.miter import MiterZ3, params_sound, worst_case_error
+from repro.core.synth import synthesize
+from repro.core.templates import NonsharedTemplate, SharedTemplate
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("shared", {"its": 3}),
+    ("xpat", {"lpp": 3}),
+])
+def test_z3_model_is_sound(method, kw):
+    exact = benchmark("adder_i4")
+    tpl = (
+        SharedTemplate(4, 3, pit=4)
+        if method == "shared"
+        else NonsharedTemplate(4, 3, ppo=3)
+    )
+    m = MiterZ3(exact, tpl)
+    params = m.solve(et=1, **kw)
+    assert params is not None
+    assert params_sound(tpl, params, exact.eval_words(), et=1)
+    circ = tpl.instantiate(params)
+    assert worst_case_error(exact, circ) <= 1
+    # synthesis must not change behaviour
+    assert worst_case_error(exact, synthesize(circ)) <= 1
+
+
+def test_et_zero_requires_exactness():
+    """ET=0 means the approximation IS the exact function.
+
+    A 2-bit adder's minimal multi-output SoP needs ~11 shared products
+    (2 for s0, ~6 for the XOR3 middle bit, 3 for carry) — pool 13."""
+    exact = benchmark("adder_i4")
+    tpl = SharedTemplate(4, 3, pit=13)
+    params = MiterZ3(exact, tpl).solve(et=0, its=13, timeout_ms=180_000)
+    assert params is not None
+    circ = tpl.instantiate(params)
+    assert np.array_equal(circ.eval_words(), exact.eval_words())
+
+
+def test_infeasible_grid_point_is_unsat():
+    """One product cannot realize a 2-bit adder within ET=0."""
+    exact = benchmark("adder_i4")
+    tpl = SharedTemplate(4, 3, pit=1)
+    assert MiterZ3(exact, tpl).solve(et=0, its=1) is None
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_wce_is_symmetric_bound(seed, et):
+    """Property: any random sound params (checked exhaustively) instantiate
+    to a circuit whose measured WCE is also <= ET (eval/instantiate agree
+    through the miter)."""
+    rng = np.random.default_rng(seed)
+    exact = benchmark("mul_i4")
+    tpl = SharedTemplate(4, 4, pit=6)
+    ev = exact.eval_words()
+    p = tpl.random_params(rng)
+    if params_sound(tpl, p, ev, et):
+        assert worst_case_error(exact, tpl.instantiate(p)) <= et
+    else:
+        assert worst_case_error(exact, tpl.instantiate(p)) > et

@@ -1,0 +1,58 @@
+"""AdamW optimizer + schedule unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optim import (
+    OptimizerConfig, apply_updates, global_norm, init_opt_state, schedule,
+)
+
+
+def _params():
+    return {"a": jnp.ones((4, 4), jnp.bfloat16), "b": jnp.zeros((3,), jnp.float32)}
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(schedule(cfg, jnp.int32(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] < lrs[1] < lrs[2]          # warming up
+    assert lrs[2] >= lrs[3] >= lrs[4]        # decaying
+    assert lrs[4] >= 0.1 * cfg.lr * 0.99     # floor at 10%
+
+
+def test_clip_bounds_update_norm():
+    cfg = OptimizerConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    p = _params()
+    st = init_opt_state(p)
+    g = jax.tree.map(lambda x: jnp.full(x.shape, 100.0, jnp.float32), p)
+    _, _, metrics = apply_updates(cfg, p, g, st)
+    assert float(metrics["grad_norm"]) > 100
+    # clipped: effective grad norm is 1 -> first-step Adam update ~ lr * sign
+    # just check no explosion
+    newp, _, _ = apply_updates(cfg, p, g, st)
+    assert all(np.isfinite(np.asarray(x, dtype=np.float32)).all()
+               for x in jax.tree.leaves(newp))
+
+
+def test_moments_are_f32_and_sharded_like_params():
+    p = _params()
+    st = init_opt_state(p)
+    for leaf in jax.tree.leaves(st["mu"]):
+        assert leaf.dtype == jnp.float32
+    assert jax.tree.structure(st["mu"]) == jax.tree.structure(p)
+
+
+def test_weight_decay_shrinks_weights():
+    cfg = OptimizerConfig(lr=1e-2, weight_decay=0.5, clip_norm=1e9)
+    p = {"w": jnp.full((8,), 2.0, jnp.float32)}
+    st = init_opt_state(p)
+    g = {"w": jnp.zeros((8,), jnp.float32)}
+    newp, _, _ = apply_updates(cfg, p, g, st)
+    assert float(newp["w"][0]) < 2.0
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    assert float(global_norm(t)) == pytest.approx(np.sqrt(3 + 16))

@@ -1,0 +1,73 @@
+"""End-to-end ALS search behaviour (small/fast configurations)."""
+
+import numpy as np
+import pytest
+
+from repro.core.arith import benchmark
+from repro.core.baselines import mecals_like, muscat_like, random_sound
+from repro.core.miter import MiterZ3, worst_case_error
+from repro.core.search import progressive_search
+from repro.core.synth import area
+from repro.core.templates import SharedTemplate
+from repro.core.tensor_search import tensor_search
+
+
+@pytest.fixture(scope="module")
+def adder4():
+    return benchmark("adder_i4")
+
+
+def test_progressive_shared_beats_exact_area(adder4):
+    rep = progressive_search(adder4, et=1, method="shared",
+                             wall_budget_s=90, timeout_ms=15_000)
+    assert rep.best is not None
+    assert rep.best.area < area(adder4)
+    for r in rep.results:
+        assert worst_case_error(adder4, r.circuit) <= 1
+
+
+def test_progressive_xpat_finds_sound_result(adder4):
+    rep = progressive_search(adder4, et=1, method="xpat",
+                             wall_budget_s=90, timeout_ms=15_000)
+    assert rep.best is not None
+    assert worst_case_error(adder4, rep.best.circuit) <= 1
+
+
+def test_shared_at_most_xpat_area(adder4):
+    """The paper's headline claim at benchmark scale (ET=2)."""
+    rs = progressive_search(adder4, et=2, method="shared",
+                            wall_budget_s=90, timeout_ms=15_000)
+    rx = progressive_search(adder4, et=2, method="xpat",
+                            wall_budget_s=90, timeout_ms=15_000)
+    assert rs.best is not None and rx.best is not None
+    assert rs.best.area <= rx.best.area + 1e-9
+
+
+def test_muscat_like_sound(adder4):
+    res = muscat_like(adder4, et=2, restarts=2, wall_budget_s=15)
+    assert res.wce <= 2
+    assert res.area <= area(adder4)
+
+
+def test_mecals_like_sound(adder4):
+    res = mecals_like(adder4, et=2, wall_budget_s=15)
+    assert res.wce <= 2
+    assert res.area <= area(adder4)
+
+
+def test_random_sound_cloud(adder4):
+    cloud = random_sound(adder4, et=2, count=30, max_batches=10)
+    assert len(cloud) > 0
+    for a, prox in cloud:
+        assert a >= 0 and prox["PIT"] >= 0
+
+
+def test_tensor_search_with_smt_seed(adder4):
+    tpl = SharedTemplate(4, 3, pit=6)
+    seed = MiterZ3(adder4, tpl).solve(et=2, its=6, timeout_ms=30_000)
+    assert seed is not None
+    rep = tensor_search(adder4, et=2, pit=6, population=1024,
+                        generations=30, seeds=[seed])
+    assert rep.best is not None
+    assert worst_case_error(adder4, rep.best.circuit) <= 2
+    assert rep.best.area <= area(tpl.instantiate(seed))

@@ -1,0 +1,73 @@
+"""Light synthesizer: function preservation + area monotonicity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arith import BENCHMARKS, benchmark
+from repro.core.circuits import Circuit, Op
+from repro.core.synth import NANGATE45_AREA, area, binarize, synthesize
+from repro.core.templates import SharedTemplate
+
+
+@pytest.mark.parametrize("name", BENCHMARKS)
+def test_synthesis_preserves_function(name):
+    c = benchmark(name)
+    s = synthesize(c)
+    assert np.array_equal(c.eval_words(), s.eval_words())
+
+
+def test_cse_rewards_product_sharing(rng):
+    """The pass that makes SHARED win: two identical products collapse."""
+    tpl = SharedTemplate(4, 2, pit=2)
+    p = tpl.random_params(rng)
+    p.lits[1] = p.lits[0]          # duplicate product
+    p.sel[:] = [[True, False], [False, True]]  # each output uses "its own"
+    circ = synthesize(tpl.instantiate(p))
+    # after CSE the duplicated AND tree exists once
+    n_and = sum(1 for g in circ.nodes if g.op is Op.AND)
+    lits_used = int((p.lits[0] != 2).sum())
+    assert n_and <= max(0, lits_used - 1) + 2  # one tree + (<=2) output wiring
+
+
+def test_constant_folding():
+    c = Circuit.empty(2)
+    one = c.const(True)
+    a = c.add(Op.AND, 0, one)      # AND(x, 1) -> x
+    o = c.add(Op.OR, a, c.const(False))
+    c.mark_output(o)
+    s = synthesize(c)
+    assert s.gate_count() == 0     # output is just input 0
+    assert np.array_equal(s.eval_words(), c.eval_words())
+
+
+def test_double_negation():
+    c = Circuit.empty(1)
+    n1 = c.add(Op.NOT, 0)
+    n2 = c.add(Op.NOT, n1)
+    c.mark_output(n2)
+    s = synthesize(c)
+    assert s.gate_count() == 0
+
+
+def test_inverter_fusion_prefers_cheap_cells():
+    c = Circuit.empty(2)
+    a = c.add(Op.AND, 0, 1)
+    n = c.add(Op.NOT, a)
+    c.mark_output(n)
+    s = synthesize(c)
+    assert any(g.op is Op.NAND for g in s.nodes)
+    assert area(s, presynthesized=True) == pytest.approx(NANGATE45_AREA[Op.NAND])
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_synthesis_never_increases_area(seed):
+    """vs the binarized raw netlist (n-ary gates are not standard cells)."""
+    rng = np.random.default_rng(seed)
+    tpl = SharedTemplate(6, 4, pit=6)
+    p = tpl.random_params(rng)
+    raw = tpl.instantiate(p)
+    syn = synthesize(raw)
+    assert np.array_equal(raw.eval_words(), syn.eval_words())
+    assert area(syn, presynthesized=True) <= area(binarize(raw), presynthesized=True) + 1e-9

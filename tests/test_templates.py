@@ -1,0 +1,80 @@
+"""Template semantics: eval == instantiate == synthesized instantiate."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.miter import values_from_tables
+from repro.core.synth import synthesize
+from repro.core.templates import (
+    IGNORE, NEG, USE, NonsharedTemplate, SharedTemplate, TemplateParams,
+)
+
+
+@pytest.mark.parametrize("cls,kw", [
+    (SharedTemplate, {"pit": 5}),
+    (NonsharedTemplate, {"ppo": 3}),
+])
+def test_eval_matches_instantiation(cls, kw, rng):
+    tpl = cls(4, 3, **kw)
+    for _ in range(100):
+        p = tpl.random_params(rng)
+        direct = values_from_tables(tpl.eval_outputs(p), 4)
+        circ = tpl.instantiate(p)
+        assert np.array_equal(direct, circ.eval_words())
+        assert np.array_equal(direct, synthesize(circ).eval_words())
+
+
+def test_shared_template_is_as_expressive_as_nonshared(rng):
+    """Any nonshared instantiation is representable in the shared template
+    with T = m*K (paper §II.C: expressiveness is preserved)."""
+    ns = NonsharedTemplate(4, 3, ppo=2)
+    for _ in range(50):
+        p = ns.random_params(rng)
+        # flatten banks into a global pool; select per output
+        T = 3 * 2
+        lits = p.lits.reshape(T, 4)
+        sel = np.zeros((3, T), dtype=bool)
+        for i in range(3):
+            sel[i, i * 2:(i + 1) * 2] = p.sel[i]
+        sh = SharedTemplate(4, 3, pit=T)
+        sp = TemplateParams(lits, sel)
+        assert np.array_equal(
+            values_from_tables(ns.eval_outputs(p), 4),
+            values_from_tables(sh.eval_outputs(sp), 4),
+        )
+
+
+def test_proxies_shared():
+    tpl = SharedTemplate(4, 2, pit=4)
+    lits = np.full((4, 4), IGNORE, dtype=np.int8)
+    lits[0, 0] = USE
+    lits[1, :2] = NEG
+    sel = np.array([[1, 1, 0, 0], [0, 1, 0, 0]], dtype=bool)
+    prox = tpl.proxies(TemplateParams(lits, sel))
+    assert prox == {"PIT": 2, "ITS": 2}
+
+
+def test_proxies_nonshared():
+    tpl = NonsharedTemplate(4, 2, ppo=3)
+    lits = np.full((2, 3, 4), IGNORE, dtype=np.int8)
+    lits[0, 0, :3] = USE
+    sel = np.zeros((2, 3), dtype=bool)
+    sel[0, 0] = True
+    sel[0, 1] = True
+    prox = tpl.proxies(TemplateParams(lits, sel))
+    assert prox == {"LPP": 3, "PPO": 2}
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_constant_one_product_saturates(seed):
+    """An all-IGNORE product selected into a sum makes that output constant 1
+    (Eq. 2's ⊤ member)."""
+    rng = np.random.default_rng(seed)
+    tpl = SharedTemplate(4, 2, pit=3)
+    p = tpl.random_params(rng)
+    p.lits[0, :] = IGNORE
+    p.sel[0, 0] = True
+    vals = values_from_tables(tpl.eval_outputs(p), 4)
+    assert bool(np.all(vals & 1 == 1))
