@@ -1,14 +1,24 @@
 """Approximate-arithmetic inference screening (Layer B of the framework).
 
-Takes an approximate 4-bit multiplier produced by the ALS engine, builds
-its LUT, and measures what routing a real model's MLP matmuls through it
-does to the logits — exactly the screening a codesign team runs at fleet
-scale before committing an operator to silicon.  Here: a reduced
-architecture on CPU; on the production mesh the same forward runs as the
-prefill_32k dry-run cell.
+Two modes:
 
-    PYTHONPATH=src python examples/approx_inference.py
+* **ad-hoc** (default, the original demo): synthesize a few approximate
+  4-bit multipliers in-process, build their LUTs, and measure logit drift
+  when a real model's MLP matmuls route through them.
+
+* **library + QoS** (``--library <dir> [--qos-budget B]``): load the
+  Pareto frontier of operators a previous search persisted (``python -m
+  repro.core.search --library <dir>``), compile each to the packed LUT the
+  Pallas kernel consumes, *measure per-layer sensitivity*, and let the QoS
+  selector assign each layer the smallest operator that keeps predicted
+  drift within budget — then run the model on the resulting per-layer plan
+  and report what each layer used (repro.launch.analysis.plan_report).
+
+    PYTHONPATH=src python examples/approx_inference.py --reduced \
+        --library runs/lib --qos-budget 0.02
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -21,41 +31,121 @@ from repro.core.synth import area
 from repro.models import forward_fn, init_model
 from repro.quant import build_lut, exact_mul_lut
 
-# --- Layer A: synthesize approximate multipliers at several ETs -------------
-# (operator source: the MUSCAT-like pruning engine — fast and sound at
-#  mul_i8 scale; the SMT/SHARED path is demonstrated on quickstart.py's
-#  adder, where 2-level SoP is competitive within quick budgets)
-exact_mult = benchmark("mul_i8")
-print(f"exact 4-bit multiplier area: {area(exact_mult)} µm²")
-luts = {}
-for et in (2, 8, 32):
-    res = muscat_like(exact_mult, et=et, restarts=2, wall_budget_s=45)
-    luts[et] = (build_lut(res.circuit), res.area)
-    print(f"  ET={et:3d}: area {res.area} µm² "
-          f"({100*(1-res.area/area(exact_mult)):.0f}% saving)")
 
-# --- Layer B: route a model's MLP matmuls through each LUT ------------------
-cfg = get_config("qwen3-4b", reduced=True).with_approx_mlp()
-key = jax.random.PRNGKey(0)
-params = init_model(cfg, key)
-batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size)}
-fwd = forward_fn(cfg)
+def make_model(arch: str, reduced: bool, seed: int = 0):
+    cfg = get_config(arch, reduced=reduced).with_approx_mlp()
+    key = jax.random.PRNGKey(seed)
+    params = init_model(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size)}
+    return cfg, params, batch, forward_fn(cfg)
 
-logits_f, _ = fwd(cfg, params, batch, lut=None)                  # float
-logits_q, _ = fwd(cfg, params, batch, lut=jnp.asarray(exact_mul_lut()))  # int4
 
-print(f"\nmodel={cfg.name}  (MLP matmuls -> W4A4 with LUT multiplier)")
-print(f"  int4 quantization alone: mean |Δlogit| = "
-      f"{float(jnp.abs(logits_f - logits_q).mean()):.4f}")
+def adhoc_main(args) -> None:
+    """The original screening flow: one-shot in-process operators."""
+    exact_mult = benchmark("mul_i8")
+    print(f"exact 4-bit multiplier area: {area(exact_mult)} µm²")
+    luts = {}
+    for et in (2, 8, 32):
+        res = muscat_like(exact_mult, et=et, restarts=2, wall_budget_s=45)
+        luts[et] = (build_lut(res.circuit), res.area)
+        print(f"  ET={et:3d}: area {res.area} µm² "
+              f"({100*(1-res.area/area(exact_mult)):.0f}% saving)")
 
-base_top1 = jnp.argmax(logits_q, -1)
-for et, (lut, a) in luts.items():
-    logits_a, _ = fwd(cfg, params, batch, lut=jnp.asarray(lut))
-    drift = float(jnp.abs(logits_q - logits_a).mean())
-    agree = float((jnp.argmax(logits_a, -1) == base_top1).mean())
-    print(f"  ET={et:3d}: extra drift {drift:.4f}, "
-          f"top-1 agreement {100*agree:.1f}%, area saving "
-          f"{100*(1 - a/area(exact_mult)):.0f}%")
+    cfg, params, batch, fwd = make_model(args.arch, args.reduced)
+    logits_f, _ = fwd(cfg, params, batch, lut=None)
+    logits_q, _ = fwd(cfg, params, batch, lut=jnp.asarray(exact_mul_lut()))
 
-print("\n-> the area/accuracy tradeoff the paper navigates, measured on a "
-      "real architecture instead of operator error alone.")
+    print(f"\nmodel={cfg.name}  (MLP matmuls -> W4A4 with LUT multiplier)")
+    print(f"  int4 quantization alone: mean |Δlogit| = "
+          f"{float(jnp.abs(logits_f - logits_q).mean()):.4f}")
+
+    base_top1 = jnp.argmax(logits_q, -1)
+    for et, (lut, a) in luts.items():
+        logits_a, _ = fwd(cfg, params, batch, lut=jnp.asarray(lut))
+        drift = float(jnp.abs(logits_q - logits_a).mean())
+        agree = float((jnp.argmax(logits_a, -1) == base_top1).mean())
+        print(f"  ET={et:3d}: extra drift {drift:.4f}, "
+              f"top-1 agreement {100*agree:.1f}%, area saving "
+              f"{100*(1 - a/area(exact_mult)):.0f}%")
+
+    print("\n-> the area/accuracy tradeoff the paper navigates, measured on "
+          "a real architecture instead of operator error alone.")
+
+
+def library_main(args) -> None:
+    """Frontier-driven per-layer QoS selection from a persisted library."""
+    from repro.launch.analysis import plan_report
+    from repro.library import (
+        load_mul_frontier, measure_layer_costs, select_plan, stack_luts,
+    )
+    from repro.library.compile import compile_cache_stats
+
+    try:
+        compiled, exact_area, bits = load_mul_frontier(args.library)
+    except LookupError as e:
+        raise SystemExit(str(e))
+    print(f"library {args.library}: {len(compiled)} operator(s) on the "
+          f"{bits}-bit multiplier frontier (exact area {exact_area} µm²):")
+    for rec, comp in compiled:
+        print(f"  {rec.key}  src={rec.source:<7s} area {rec.area:>7.3f} µm² "
+              f"wce={rec.wce:<3d} -> compiled 16x16 LUT "
+              f"wce16={comp.wce16} mae16={comp.mae16:.4f}")
+
+    cfg, params, batch, fwd = make_model(args.arch, args.reduced)
+    fwd_j = jax.jit(lambda p, b, lut: fwd(cfg, p, b, lut=lut)[0])
+    base = fwd_j(params, batch, jnp.asarray(exact_mul_lut()))
+    base_top1 = jnp.argmax(base, -1)
+    L = cfg.n_layers
+
+    # per-(layer, operator) drift, measured one probe at a time: biased LUT
+    # errors make drift non-linear in mae16, so the QoS plan runs on
+    # measured costs rather than the linear sensitivity model
+    exact16 = np.asarray(exact_mul_lut(), dtype=np.int32)
+
+    def eval_drift(per_layer):
+        stack = np.stack([exact16 if l is None else l for l in per_layer])
+        out = fwd_j(params, batch, jnp.asarray(stack))
+        return float(jnp.abs(out - base).mean())
+
+    print(f"\nmeasuring per-(layer, operator) drift on {cfg.name} "
+          f"({L} layers x {len(compiled)} operators)...")
+    costs = measure_layer_costs(eval_drift, L, compiled)
+    print("  drift matrix (layers x operators):")
+    print(np.array2string(costs, precision=4, suppress_small=True))
+
+    plan = select_plan(compiled, costs, args.qos_budget, exact_area=exact_area)
+    print(f"\nQoS plan under budget {args.qos_budget} "
+          f"(mean |Δlogit| vs int4-exact):")
+    print(plan_report(plan))
+
+    logits_p = fwd_j(params, batch, jnp.asarray(stack_luts(plan, compiled)))
+    drift = float(jnp.abs(logits_p - base).mean())
+    agree = float((jnp.argmax(logits_p, -1) == base_top1).mean())
+    cs = compile_cache_stats()
+    print(f"\nmeasured drift {drift:.5f} (predicted {plan.predicted_total:.5f}), "
+          f"top-1 agreement {100*agree:.1f}%")
+    print(f"compile cache: {cs['hits']} hits / {cs['misses']} misses "
+          f"({cs['size']} table(s))")
+    print("-> per-layer operators selected from the persisted frontier, "
+          "compiled to LUTs, routed through approx_matmul.")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    # reduced by default: the plain invocation stays CPU-runnable
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--library", default=None,
+                    help="operator-store directory (enables the QoS flow)")
+    ap.add_argument("--qos-budget", type=float, default=0.05,
+                    help="allowed mean |Δlogit| vs the int4-exact baseline")
+    args = ap.parse_args()
+    if args.library:
+        library_main(args)
+    else:
+        adhoc_main(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
+from repro.library.pareto import pareto_front  # noqa: E402
 
 OUT = os.path.join(os.path.dirname(__file__), "perf")
 
@@ -40,12 +41,19 @@ STEPS = [
 ]
 
 
+def _t_step(rec: dict) -> float:
+    return max(rec["t_compute"], rec["t_memory"], rec["t_collective"])
+
+
 def main() -> None:
     os.makedirs(OUT, exist_ok=True)
+    by_pair: dict[tuple, list] = {}
     for arch, shape, tag, kw in STEPS:
         t0 = time.time()
         rec = run_cell(arch, shape, multi_pod=False, out_dir=OUT, tag=tag, **kw)
         if rec["status"] == "ok":
+            rec["tag"] = tag
+            by_pair.setdefault((arch, shape), []).append(rec)
             print(f"{arch:24s} {shape:10s} {tag:22s} "
                   f"t_comp={rec['t_compute']:.3g}s t_mem={rec['t_memory']:.3g}s "
                   f"t_coll={rec['t_collective']:.3g}s "
@@ -54,6 +62,15 @@ def main() -> None:
         else:
             print(f"{arch} {shape} {tag} -> {rec['status']}: "
                   f"{rec.get('error','')[:200]}", flush=True)
+
+    # pick winners by dominance over (modelled step time, HBM traffic),
+    # not by eyeballing the log — same machinery as the operator library.
+    for (arch, shape), recs in by_pair.items():
+        front = pareto_front(recs, (_t_step, lambda r: r["hlo_bytes"]))
+        tags = ", ".join(r["tag"] for r in front)
+        best = front[0]
+        print(f"{arch} {shape}: pareto iterations [{tags}]; "
+              f"fastest {best['tag']} at t_step={_t_step(best):.3g}s", flush=True)
 
 
 if __name__ == "__main__":

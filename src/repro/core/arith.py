@@ -22,6 +22,7 @@ __all__ = [
     "ripple_carry_adder",
     "array_multiplier",
     "benchmark",
+    "parse_benchmark_name",
     "BENCHMARKS",
 ]
 
@@ -106,15 +107,29 @@ def array_multiplier(bits: int) -> Circuit:
     return c
 
 
+def parse_benchmark_name(name: str) -> tuple[str, int]:
+    """``"mul_i8" -> ("mul", 4)``: benchmark name to (kind, operand bits).
+
+    The single parser for every consumer (benchmark(), the search CLI's
+    store signatures, fig5) — the naming scheme must not diverge between
+    the circuit searched and the signature it is stored under.
+    """
+    try:
+        kind, size = name.split("_i")
+        bits = int(size) // 2
+    except ValueError:
+        raise KeyError(name) from None
+    if kind not in ("adder", "mul") or bits < 1:
+        raise KeyError(name)
+    return kind, bits
+
+
 def benchmark(name: str) -> Circuit:
     """Fetch a paper benchmark by name, e.g. ``adder_i4`` or ``mul_i8``."""
-    kind, size = name.split("_i")
-    bits = int(size) // 2
+    kind, bits = parse_benchmark_name(name)
     if kind == "adder":
         return ripple_carry_adder(bits)
-    if kind == "mul":
-        return array_multiplier(bits)
-    raise KeyError(name)
+    return array_multiplier(bits)
 
 
 BENCHMARKS = ["adder_i4", "adder_i6", "adder_i8", "mul_i4", "mul_i6", "mul_i8"]

@@ -21,15 +21,22 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 import numpy as np
-import z3
+
+try:
+    import z3
+except ImportError:  # pragma: no cover - exercised on z3-less images
+    z3 = None  # the exhaustive backend stays fully usable without the SMT one
 
 from .circuits import Circuit, unpack_bits
 from .templates import NonsharedTemplate, SharedTemplate, TemplateParams
+
+HAVE_Z3 = z3 is not None
 
 __all__ = [
     "worst_case_error",
     "values_from_tables",
     "MiterZ3",
+    "HAVE_Z3",
 ]
 
 
@@ -83,6 +90,11 @@ class MiterZ3:
         exact: Circuit,
         template: NonsharedTemplate | SharedTemplate,
     ) -> None:
+        if z3 is None:
+            raise RuntimeError(
+                "z3-solver is not installed; the SMT miter is unavailable "
+                "(the exhaustive backend and the non-SMT searches still work)"
+            )
         self.exact = exact
         self.template = template
         self.n = exact.n_inputs

@@ -33,7 +33,11 @@ import time
 from dataclasses import dataclass, field
 
 import numpy as np
-import z3
+
+try:
+    import z3
+except ImportError:  # pragma: no cover - exercised on z3-less images
+    z3 = None
 
 from .circuits import Circuit
 from .miter import MiterZ3, params_sound
@@ -78,7 +82,8 @@ class _Session:
     """One (exact, method, et) solving session with shared bookkeeping."""
 
     def __init__(self, exact: Circuit, method: str, et: int,
-                 timeout_ms: int, seed: int, t_start: float, budget_s: float):
+                 timeout_ms: int, seed: int, t_start: float, budget_s: float,
+                 sink=None):
         self.exact = exact
         self.method = method
         self.et = et
@@ -86,6 +91,7 @@ class _Session:
         self.seed = seed
         self.t_start = t_start
         self.budget_s = budget_s
+        self.sink = sink
         self.exact_values = exact.eval_words()
         self.miters: dict[int, MiterZ3] = {}
         self.report = SearchReport(method=method, benchmark=exact.name, et=et)
@@ -142,6 +148,8 @@ class _Session:
         )
         self.report.results.append(res)
         self.report.sat_points += 1
+        if self.sink is not None:
+            self.sink(res)
         return res
 
     # -- literal tightening ---------------------------------------------------
@@ -190,15 +198,26 @@ def progressive_search(
     wall_budget_s: float = 600.0,
     seed: int = 0,
     tighten: bool = True,
+    sink=None,
 ) -> SearchReport:
     """Run the progressive search for one benchmark and ET.
 
     ``method``: ``"shared"`` (the paper) or ``"xpat"`` (nonshared baseline).
+    ``sink``: optional callable invoked with every sound
+    :class:`SearchResult` as it is found — e.g.
+    ``repro.library.OperatorStore.sink(...)`` to persist the whole Pareto
+    sweep instead of keeping only ``report.best``.
     """
+    if z3 is None:
+        raise RuntimeError(
+            "z3-solver is not installed; progressive_search needs the SMT "
+            "backend (use repro.core.baselines / tensor_search instead)"
+        )
     n, m = exact.n_inputs, exact.n_outputs
     if max_primary is None:
         max_primary = 4 * m if method == "shared" else m + 4
-    sess = _Session(exact, method, et, timeout_ms, seed, time.time(), wall_budget_s)
+    sess = _Session(exact, method, et, timeout_ms, seed, time.time(),
+                    wall_budget_s, sink)
 
     # ---- phase 1: frontier probe (secondary unconstrained) ------------------
     frontier = None
@@ -261,3 +280,82 @@ def progressive_search(
 
     sess.report.wall_s = time.time() - sess.t_start
     return sess.report
+
+
+# ---------------------------------------------------------------------------
+# CLI: run a search and fill an operator library
+# ---------------------------------------------------------------------------
+def main(argv: list[str] | None = None) -> None:
+    """``python -m repro.core.search --benchmark mul_i4 --et 1 2 4
+    --library runs/lib`` — search and persist every sound result.
+
+    ``--method auto`` uses the paper's SMT search when z3 is available and
+    falls back to the sound non-SMT engines (muscat / tensor) otherwise,
+    so library filling works on solver-less images too.
+    """
+    import argparse
+
+    from ..library import OperatorSignature, OperatorStore
+    from .arith import benchmark, parse_benchmark_name
+    from .baselines import muscat_like
+    from .tensor_search import tensor_search
+
+    ap = argparse.ArgumentParser(description=main.__doc__)
+    ap.add_argument("--benchmark", default="mul_i4",
+                    help="e.g. mul_i4 (2-bit), mul_i8 (4-bit), adder_i4")
+    ap.add_argument("--et", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--method", default="auto",
+                    choices=["auto", "shared", "xpat", "muscat", "tensor"])
+    ap.add_argument("--library", default=None,
+                    help="operator-store directory to sink results into")
+    ap.add_argument("--budget-s", type=float, default=60.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    try:
+        kind, bits = parse_benchmark_name(args.benchmark)
+        exact = benchmark(args.benchmark)
+    except KeyError:
+        ap.error(f"unknown benchmark {args.benchmark!r} "
+                 "(expected e.g. mul_i4, adder_i6, mul_i8)")
+    method = args.method
+    if method == "auto":
+        method = "shared" if z3 is not None else "muscat"
+        print(f"--method auto -> {method} (z3 {'available' if z3 else 'missing'})")
+
+    store = OperatorStore(args.library) if args.library else None
+    for et in args.et:
+        sig = OperatorSignature(kind, bits, "wce", et)
+        n_before = len(store) if store is not None else 0
+        if method in ("shared", "xpat"):
+            sink = store.sink(sig, method) if store is not None else None
+            rep = progressive_search(exact, et=et, method=method,
+                                     wall_budget_s=args.budget_s,
+                                     seed=args.seed, sink=sink)
+            best = rep.best
+        elif method == "muscat":
+            res = muscat_like(exact, et=et, restarts=3, seed=args.seed,
+                              wall_budget_s=args.budget_s)
+            if store is not None:
+                store.put_circuit(res.circuit, sig, area=res.area,
+                                  source="muscat", meta={"wall_s": res.wall_s})
+            best = res
+        else:  # tensor
+            rep = tensor_search(exact, et=et, seed=args.seed,
+                                wall_budget_s=args.budget_s)
+            if store is not None:
+                for r in rep.results:
+                    store.put_circuit(r.circuit, sig, area=r.area,
+                                      source="tensor", proxies=r.proxies,
+                                      params=r.params,
+                                      meta={"wall_s": r.wall_s})
+            best = rep.best
+        stored = (len(store) - n_before) if store is not None else 0
+        print(f"{args.benchmark} ET={et:3d} [{method}]: "
+              + (f"best area {best.area} µm²" if best else "no sound result")
+              + (f", {stored} new operator(s) -> {args.library}"
+                 if store is not None else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -80,6 +80,7 @@ def tensor_search(
     seed: int = 0,
     keep: int = 16,
     seeds: list[TemplateParams] | None = None,
+    wall_budget_s: float | None = None,
 ) -> TensorSearchReport:
     """Evolve shared-template parameters toward minimal-area sound circuits.
 
@@ -150,6 +151,8 @@ def tensor_search(
 
     report = TensorSearchReport(benchmark=exact.name, et=et)
     for g in range(generations):
+        if wall_budget_s is not None and time.time() - t0 > wall_budget_s:
+            break
         key, lits, sel = step(key, lits, sel)
         report.generations += 1
         report.evaluations += population

@@ -214,6 +214,33 @@ def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
     )
 
 
+# ---------------------------------------------------------------------------
+# QoS layer-plan reporting: which approximate operator each layer runs on
+# ---------------------------------------------------------------------------
+def plan_report(plan) -> str:
+    """Human-readable per-layer operator table for a QoS
+    :class:`~repro.library.qos.LayerPlan` — operator key, area vs the exact
+    baseline, compiled-table error, and the plan-level totals."""
+    lines = [
+        f"{'layer':>5s}  {'operator':<18s} {'area µm²':>9s} {'Δarea':>7s} "
+        f"{'pred.drift':>10s}"
+    ]
+    for c in plan.choices:
+        name = c.key if c.key is not None else "exact"
+        saving = 1.0 - c.area / plan.exact_area if plan.exact_area else 0.0
+        lines.append(
+            f"{c.layer:>5d}  {name:<18s} {c.area:>9.3f} {100 * saving:>6.1f}% "
+            f"{c.predicted_drift:>10.5f}"
+        )
+    lines.append(
+        f"total area {plan.total_area:.3f} µm² vs exact "
+        f"{plan.exact_total_area:.3f} µm² "
+        f"({100 * plan.area_saving:.1f}% saving), predicted drift "
+        f"{plan.predicted_total:.5f} <= budget {plan.budget:.5f}"
+    )
+    return "\n".join(lines)
+
+
 def model_flops_train(n_active_params: int, tokens: int) -> float:
     return 6.0 * n_active_params * tokens
 

@@ -13,19 +13,29 @@ layout that survives slow inter-pod links.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.x; older jax defaults to Auto anyway
+    from jax.sharding import AxisType
+
+    def _axis_kw(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+
+except ImportError:  # pragma: no cover - exercised on older jax images
+
+    def _axis_kw(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_smoke_mesh():
     """1-device mesh with the production axis names (CPU tests)."""
     n = jax.device_count()
-    return jax.make_mesh((1, n), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return jax.make_mesh((1, n), ("data", "model"), **_axis_kw(2))
 
 
 # TPU v5e hardware constants (per chip) — the roofline denominators.

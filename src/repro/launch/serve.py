@@ -21,6 +21,32 @@ from ..train.data import DataState, synth_batch
 from .mesh import make_smoke_mesh
 
 
+def _qos_luts(cfg, library: str, budget: float):
+    """Build the per-layer LUT stack from a stored operator frontier.
+
+    Serving has no calibration batch, so sensitivities are uniform and the
+    budget is in summed compiled-table mae16 units (one mid-grade 2-bit
+    operator costs ~30); run ``examples/approx_inference.py --library``
+    for measured per-layer drift budgets."""
+    import numpy as np
+
+    from ..library import load_mul_frontier, select_plan, stack_luts
+    from .analysis import plan_report
+
+    try:
+        compiled, exact_area, _bits = load_mul_frontier(library)
+    except LookupError as e:
+        raise SystemExit(str(e))
+    plan = select_plan(compiled, np.ones(cfg.n_layers), budget,
+                       exact_area=exact_area)
+    print(f"QoS plan from {library} ({len(compiled)} frontier operator(s)):")
+    print(plan_report(plan))
+    if all(c.key is None for c in plan.choices):
+        print("note: budget admits no downgrade — every layer stays exact "
+              "(serving budgets are mae16 units; try a larger --qos-budget)")
+    return jnp.asarray(stack_luts(plan, compiled))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b")
@@ -29,9 +55,22 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--library", default=None,
+                    help="approximate-operator store; routes MLP matmuls "
+                         "through QoS-selected per-layer LUT multipliers")
+    ap.add_argument("--qos-budget", type=float, default=50.0,
+                    help="QoS budget in summed compiled-table mae16 units "
+                         "(uniform layer sensitivities; measure real "
+                         "per-layer drift with examples/approx_inference.py)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    luts = None
+    if args.library:
+        if cfg.family == "audio":
+            raise SystemExit("--library: LUT routing supports LM families only")
+        cfg = cfg.with_approx_mlp()
+        luts = _qos_luts(cfg, args.library, args.qos_budget)
     mesh = make_smoke_mesh()
     key = jax.random.PRNGKey(args.seed)
 
@@ -45,10 +84,11 @@ def main() -> None:
             frames = synth_batch(cfg, args.batch, 1, DataState(args.seed, 0))["frames"]
             caches = prefill_cross(cfg, params, frames, caches)
 
-        jit_step = jax.jit(
-            lambda p, c, t, pos: step(cfg, p, c, t, pos),
-            donate_argnums=(1,),
-        )
+        if luts is not None:
+            step_fn = lambda p, c, t, pos: step(cfg, p, c, t, pos, luts=luts)
+        else:  # encdec's decode step has no luts parameter
+            step_fn = lambda p, c, t, pos: step(cfg, p, c, t, pos)
+        jit_step = jax.jit(step_fn, donate_argnums=(1,))
 
         prompts = synth_batch(cfg, args.batch, args.prompt_len,
                               DataState(args.seed, 1))["tokens"]

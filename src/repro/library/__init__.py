@@ -1,0 +1,71 @@
+"""Approximate-operator library + runtime QoS selection.
+
+The ALS searches (:mod:`repro.core.search`, :mod:`repro.core.baselines`,
+:mod:`repro.core.tensor_search`) each emit *many* sound approximations per
+run — a Pareto sweep of synthesized area against error threshold (paper
+Fig. 4).  This package turns those one-shot, in-process results into a
+persistent, serving-grade operator library (AxOSyn's "library of
+Pareto-optimal operators" framing, with QoS-Nets-style runtime selection):
+
+* :mod:`repro.library.store` — versioned on-disk artifact store.  Every
+  operator (netlist + template params + area + measured error metrics) is
+  serialized under a content-addressed key, grouped by operator signature
+  ``(op_kind, bits, error_metric, threshold)``.  Searches write through a
+  ``sink`` callback; nothing is thrown away between runs.
+* :mod:`repro.library.pareto` — dominance filtering and area-vs-error
+  frontier queries over stored operators.  This replaces the per-script
+  ad-hoc ``report.best`` selection: consumers ask the frontier for "the
+  cheapest operator whose error fits my bound".
+* :mod:`repro.library.compile` — lowers any stored multiplier/adder to the
+  packed ``(16, 16)`` LUT the Pallas ``approx_matmul`` kernel consumes.
+  Generalizes :func:`repro.quant.lut.build_lut` beyond 4-bit multipliers:
+  sub-4-bit multipliers are tiled recursively (Kulkarni-style 2x2 building
+  blocks), adders are carry-ripple-chained, and compiled tables are cached
+  in-memory by content key.
+* :mod:`repro.library.qos` — per-layer runtime operator selection.  Given
+  measured per-layer sensitivities and an accuracy budget, a greedy
+  area-descent pass assigns each model layer the smallest operator that
+  keeps the predicted degradation within budget, emitting a
+  :class:`~repro.library.qos.LayerPlan` whose stacked LUTs route straight
+  into the model forward / decode paths.
+
+Wiring: ``repro.core.search`` gains a library sink + CLI (``python -m
+repro.core.search --library <dir>``), ``examples/approx_inference.py`` and
+``repro.launch.serve`` gain ``--library`` / ``--qos-budget`` flags, and
+``repro.launch.analysis`` reports which operator each layer used.
+"""
+
+from .compile import (
+    CompiledLut,
+    clear_compile_cache,
+    compile_circuit,
+    compile_record,
+    load_mul_frontier,
+)
+from .pareto import ParetoFrontier, pareto_front
+from .qos import (
+    LayerPlan,
+    measure_layer_costs,
+    measure_sensitivities,
+    select_plan,
+    stack_luts,
+)
+from .store import OperatorRecord, OperatorSignature, OperatorStore
+
+__all__ = [
+    "OperatorStore",
+    "OperatorRecord",
+    "OperatorSignature",
+    "ParetoFrontier",
+    "pareto_front",
+    "CompiledLut",
+    "compile_record",
+    "compile_circuit",
+    "load_mul_frontier",
+    "clear_compile_cache",
+    "LayerPlan",
+    "select_plan",
+    "measure_layer_costs",
+    "measure_sensitivities",
+    "stack_luts",
+]

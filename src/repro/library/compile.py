@@ -1,0 +1,190 @@
+"""Lower stored operators to the packed LUT ``kernels/approx_matmul`` eats.
+
+The Pallas kernel consumes a dense ``(16, 16) int32`` table over unsigned
+4-bit codes.  :func:`repro.quant.lut.build_lut` only handled the 4x4-bit
+multiplier; here any stored operator lowers to that format:
+
+* **4-bit multiplier** — direct evaluation (identical to ``build_lut``).
+* **sub-4-bit multiplier** — recursive tiling: split each 4-bit operand
+  into ``ceil(4/b)`` b-bit chunks and sum the shifted chunk products
+  ``M[a_i, b_j] << b(i+j)``, with ``M`` the operator's base table.  This
+  is how small approximate building blocks scale up in hardware
+  (Kulkarni-style 2x2 multipliers composing a 4x4).
+* **adder** — carry-ripple chaining of b-bit blocks: each chunk sum goes
+  through the approximate adder, the carry is folded in with a second
+  application of the block, and chunk results concatenate.  The result is
+  the operator's full 16x16 behaviour map (useful for accumulator
+  emulation and error analysis; the matmul route consumes mul tables).
+
+Compiled tables are cached in-memory, keyed by the record's content key —
+re-planning a fleet of layers hits the cache, not the evaluator.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.circuits import Circuit
+from ..quant.lut import build_lut
+from .store import OperatorRecord
+
+__all__ = [
+    "CompiledLut",
+    "base_table",
+    "compile_circuit",
+    "compile_record",
+    "exact_lut16",
+    "load_mul_frontier",
+    "clear_compile_cache",
+    "compile_cache_stats",
+]
+
+
+def base_table(circuit: Circuit, bits: int) -> np.ndarray:
+    """The operator's ``(2**bits, 2**bits)`` behaviour map — a checked,
+    widened view of :func:`repro.quant.lut.build_lut` (tiling shifts need
+    int64 headroom)."""
+    assert circuit.n_inputs == 2 * bits, (
+        f"expected {2 * bits} inputs for a {bits}-bit operator, "
+        f"got {circuit.n_inputs}"
+    )
+    return build_lut(circuit).astype(np.int64)
+
+
+def _chunks(x: np.ndarray, bits: int) -> list[np.ndarray]:
+    mask = (1 << bits) - 1
+    n = -(-4 // bits)  # ceil(4 / bits)
+    return [(x >> (bits * i)) & mask for i in range(n)]
+
+
+def _tile_mul(base: np.ndarray, bits: int) -> np.ndarray:
+    """Compose a 4x4 multiplier table from a b-bit multiplier block."""
+    a = np.arange(16)
+    ai, bj = _chunks(a, bits), _chunks(a, bits)
+    out = np.zeros((16, 16), dtype=np.int64)
+    for i, ac in enumerate(ai):
+        for j, bc in enumerate(bj):
+            out += base[ac[:, None], bc[None, :]] << (bits * (i + j))
+    return out
+
+
+def _chain_add(base: np.ndarray, bits: int) -> np.ndarray:
+    """Compose a 4+4-bit adder table by carry-rippling b-bit blocks."""
+    mask = (1 << bits) - 1
+    a = np.arange(16)
+    ai, bj = _chunks(a, bits), _chunks(a, bits)
+    carry = np.zeros((16, 16), dtype=np.int64)
+    out = np.zeros((16, 16), dtype=np.int64)
+    for i, (ac, bc) in enumerate(zip(ai, bj)):
+        t = base[ac[:, None], bc[None, :]]
+        if i == 0:
+            s, carry = t & mask, t >> bits
+        else:
+            # fold the incoming carry with a second block application
+            t2 = base[t & mask, carry]
+            s = t2 & mask
+            carry = np.minimum(1, (t >> bits) + (t2 >> bits))
+        out += s << (bits * i)
+    # the final carry sits one chunk above the last block (bit 4 for 1/2/4-bit
+    # blocks, bit 6 for 3-bit blocks whose top chunk spans bits 3..5)
+    return out + (carry << (bits * len(ai)))
+
+
+def exact_lut16(op_kind: str) -> np.ndarray:
+    """Exact 16x16 reference semantics for a compiled table."""
+    a = np.arange(16, dtype=np.int64)
+    if op_kind == "mul":
+        return a[:, None] * a[None, :]
+    if op_kind == "adder":
+        return a[:, None] + a[None, :]
+    raise ValueError(f"unknown op_kind {op_kind!r}")
+
+
+@dataclass(frozen=True)
+class CompiledLut:
+    """A (16, 16) table plus its error metrics *at the compiled level* —
+    tiling amplifies block errors, so QoS prediction must use these, not
+    the block-level wce."""
+
+    lut: np.ndarray          # (16, 16) int32
+    op_kind: str
+    bits: int
+    wce16: int               # worst |err| of the compiled table vs exact
+    mae16: float             # mean |err| of the compiled table vs exact
+
+
+def compile_circuit(circuit: Circuit, op_kind: str, bits: int) -> CompiledLut:
+    base = base_table(circuit, bits)
+    if op_kind == "mul":
+        lut = base if bits == 4 else _tile_mul(base, bits)
+    elif op_kind == "adder":
+        lut = _chain_add(base, bits)
+    else:
+        raise ValueError(f"unknown op_kind {op_kind!r}")
+    err = np.abs(lut - exact_lut16(op_kind))
+    return CompiledLut(
+        lut=lut.astype(np.int32),
+        op_kind=op_kind,
+        bits=bits,
+        wce16=int(err.max()),
+        mae16=float(err.mean()),
+    )
+
+
+def load_mul_frontier(library) -> tuple[list[tuple[OperatorRecord, "CompiledLut"]], float, int]:
+    """One-stop loader for consumers (example, serve): open a store, take
+    the widest-operand multiplier frontier, compile every frontier record,
+    and return ``(compiled, exact_area, bits)``.
+
+    Raises :class:`LookupError` when the store holds no multipliers.
+    """
+    from ..core.arith import benchmark
+    from ..core.synth import area
+    from .pareto import ParetoFrontier
+    from .store import OperatorStore
+
+    store = OperatorStore(library)
+    sigs = [s for s in store.signatures() if s.op_kind == "mul"]
+    if not sigs:
+        raise LookupError(
+            f"no multiplier operators in library {library}; fill it with: "
+            f"python -m repro.core.search --benchmark mul_i4 --library {library}"
+        )
+    bits = max(s.bits for s in sigs)
+    frontier = ParetoFrontier.from_store(store, "mul", bits)
+    compiled = [(rec, compile_record(rec)) for rec in frontier.front]
+    exact_area = area(benchmark(f"mul_i{2 * bits}"))
+    return compiled, exact_area, bits
+
+
+# ---------------------------------------------------------------------------
+# in-memory compile cache
+# ---------------------------------------------------------------------------
+_CACHE: dict[tuple[str, str, int], CompiledLut] = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def compile_record(record: OperatorRecord) -> CompiledLut:
+    """Compile a stored operator, memoized by its content key."""
+    key = (record.key or record.content_key(), record.signature.op_kind,
+           record.signature.bits)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        _STATS["hits"] += 1
+        return hit
+    _STATS["misses"] += 1
+    out = compile_circuit(record.circuit, record.signature.op_kind,
+                          record.signature.bits)
+    _CACHE[key] = out
+    return out
+
+
+def clear_compile_cache() -> None:
+    _CACHE.clear()
+    _STATS.update(hits=0, misses=0)
+
+
+def compile_cache_stats() -> dict[str, int]:
+    return dict(_STATS, size=len(_CACHE))

@@ -1,0 +1,206 @@
+"""Runtime QoS selection: per-layer operators under an accuracy budget.
+
+QoS-Nets-style: each model layer may route its matmuls through a
+*different* frontier operator.  Degradation is modelled linearly —
+``predicted drift of layer l on operator o = sensitivity[l] * mae16(o)``
+— with per-layer sensitivities *measured* by probing one layer at a time
+(:func:`measure_sensitivities`).  Selection is greedy area-descent:
+
+1. every layer starts on the exact operator (cost 0),
+2. repeatedly take the single-layer downgrade with the best
+   area-saved-per-predicted-drift ratio,
+3. stop at the first step that would exceed the budget.
+
+The stop-at-first-violation rule makes the accepted steps a prefix of a
+budget-independent sequence, so a tighter budget can never produce a
+*larger* total area (the monotonicity property the tests pin down).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .compile import CompiledLut, exact_lut16
+from .store import OperatorRecord
+
+__all__ = [
+    "LayerChoice",
+    "LayerPlan",
+    "select_plan",
+    "measure_layer_costs",
+    "measure_sensitivities",
+    "stack_luts",
+]
+
+
+@dataclass
+class LayerChoice:
+    """The operator one layer runs on.  ``key is None`` = exact multiplier."""
+
+    layer: int
+    key: str | None
+    area: float
+    predicted_drift: float = 0.0
+
+
+@dataclass
+class LayerPlan:
+    """A full per-layer assignment plus the budget accounting behind it."""
+
+    choices: list[LayerChoice]
+    budget: float
+    predicted_total: float      # sum of per-layer predicted drifts
+    exact_area: float           # area of the exact reference operator
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.choices)
+
+    @property
+    def total_area(self) -> float:
+        return float(sum(c.area for c in self.choices))
+
+    @property
+    def exact_total_area(self) -> float:
+        return self.exact_area * self.n_layers
+
+    @property
+    def area_saving(self) -> float:
+        tot = self.exact_total_area
+        return 1.0 - self.total_area / tot if tot else 0.0
+
+    def operators_used(self) -> dict[str | None, int]:
+        out: dict[str | None, int] = {}
+        for c in self.choices:
+            out[c.key] = out.get(c.key, 0) + 1
+        return out
+
+
+def select_plan(
+    operators: Sequence[tuple[OperatorRecord, CompiledLut]],
+    sensitivities: Sequence[float] | np.ndarray,
+    budget: float,
+    *,
+    exact_area: float,
+) -> LayerPlan:
+    """Greedy area-descent over the (layer, operator) lattice.
+
+    ``operators``: frontier operators with their compiled tables (any
+    order).  ``sensitivities``: either a per-layer vector ``(L,)`` of
+    drift per unit mae16 (the cheap linear model), or a measured cost
+    matrix ``(L, len(operators))`` of per-(layer, operator) drifts
+    aligned with ``operators`` — LUT errors are biased, so measured
+    per-operator costs predict far better than the linear model.
+    ``budget``: total predicted drift allowed.
+    """
+    sens = np.asarray(sensitivities, dtype=np.float64)
+    assert (sens >= 0).all(), "drift costs must be non-negative"
+    n_layers = sens.shape[0]
+    if sens.ndim == 1:
+        maes = np.array([comp.mae16 for _, comp in operators])
+        costs = sens[:, None] * maes[None, :]          # (L, O) linear model
+    else:
+        assert sens.shape == (n_layers, len(operators))
+        costs = sens
+
+    # per-layer downgrade ladder: exact first, then cost-ascending operators
+    # that strictly save area over the previous rung (dominated rungs and
+    # rungs costlier than a cheaper-area option never help).
+    ladders: list[list[tuple[str | None, float, float]]] = []
+    for l in range(n_layers):
+        order = sorted(range(len(operators)),
+                       key=lambda o: (costs[l, o], operators[o][0].area))
+        ladder: list[tuple[str | None, float, float]] = [(None, exact_area, 0.0)]
+        for o in order:
+            rec = operators[o][0]
+            if rec.area < ladder[-1][1]:
+                ladder.append((rec.key, rec.area, float(costs[l, o])))
+        ladders.append(ladder)
+
+    level = [0] * n_layers
+    spent = 0.0
+    while True:
+        best = None  # (ratio, layer) — deterministic tie-break on layer id
+        for l in range(n_layers):
+            ladder = ladders[l]
+            if level[l] + 1 >= len(ladder):
+                continue
+            _, a_cur, e_cur = ladder[level[l]]
+            _, a_nxt, e_nxt = ladder[level[l] + 1]
+            d_area = a_cur - a_nxt
+            d_cost = e_nxt - e_cur
+            ratio = d_area / d_cost if d_cost > 0 else np.inf
+            if best is None or ratio > best[0]:
+                best = (ratio, l, d_cost)
+        if best is None:
+            break
+        _, l, d_cost = best
+        if spent + d_cost > budget:
+            break  # first violation stops the pass (monotonicity invariant)
+        level[l] += 1
+        spent += d_cost
+
+    choices = []
+    for l in range(n_layers):
+        key, a, e = ladders[l][level[l]]
+        choices.append(LayerChoice(l, key, a, predicted_drift=e))
+    return LayerPlan(
+        choices=choices, budget=float(budget), predicted_total=float(spent),
+        exact_area=float(exact_area),
+    )
+
+
+def measure_layer_costs(
+    eval_drift: Callable[[list[np.ndarray | None]], float],
+    n_layers: int,
+    operators: Sequence[tuple[OperatorRecord, CompiledLut]],
+) -> np.ndarray:
+    """Measured ``(L, O)`` drift matrix: operator ``o`` probed at layer
+    ``l`` alone.  L*O forwards — exact per-(layer, operator) costs for
+    :func:`select_plan`, which matter because biased LUT errors break the
+    linear-in-mae16 model badly."""
+    costs = np.zeros((n_layers, len(operators)))
+    for o, (_, comp) in enumerate(operators):
+        for l in range(n_layers):
+            luts: list[np.ndarray | None] = [None] * n_layers
+            luts[l] = comp.lut
+            costs[l, o] = max(0.0, eval_drift(luts))
+    return costs
+
+
+def measure_sensitivities(
+    eval_drift: Callable[[list[np.ndarray | None]], float],
+    n_layers: int,
+    probe: CompiledLut,
+) -> np.ndarray:
+    """Per-layer drift per unit mae16, by probing one layer at a time.
+
+    ``eval_drift(per_layer_luts)`` runs the model with layer ``l`` routed
+    through ``per_layer_luts[l]`` (``None`` = exact) and returns a scalar
+    drift against the all-exact baseline.  The probe should be a
+    *coarse* operator so the signal is well above noise.
+    """
+    assert probe.mae16 > 0, "probe operator must be approximate"
+    sens = np.zeros(n_layers)
+    for l in range(n_layers):
+        luts: list[np.ndarray | None] = [None] * n_layers
+        luts[l] = probe.lut
+        sens[l] = max(0.0, eval_drift(luts)) / probe.mae16
+    return sens
+
+
+def stack_luts(
+    plan: LayerPlan,
+    records: Sequence[tuple[OperatorRecord, CompiledLut]],
+) -> np.ndarray:
+    """Materialize a plan as the ``(L, 16, 16) int32`` array the model
+    forward consumes; exact layers get the exact product table."""
+    by_key = {rec.key: comp for rec, comp in records}
+    exact = exact_lut16("mul").astype(np.int32)
+    out = np.zeros((plan.n_layers, 16, 16), dtype=np.int32)
+    for c in plan.choices:
+        out[c.layer] = exact if c.key is None else by_key[c.key].lut
+    return out

@@ -129,6 +129,10 @@ def forward_lm(
 
     ``batch['tokens']``: (B, S) int32.  VLM batches add ``'patches'``
     (B, P, d_vision) which are projected and prepended.
+    ``lut``: optional approximate-multiplier table — either one (16, 16)
+    table shared by every layer, or a per-layer (n_layers, 16, 16) stack
+    (a QoS :class:`~repro.library.qos.LayerPlan`), which rides through the
+    layer scan alongside the stacked params.
     ``scan_unroll``: unroll the layer scan — used by the roofline analysis
     (XLA cost_analysis counts a rolled scan body once; see dryrun.py).
     """
@@ -142,14 +146,14 @@ def forward_lm(
 
     win = window_schedule(cfg)
     lut_ = lut if cfg.approx_mlp else None
+    per_layer_lut = lut_ is not None and jnp.ndim(lut_) == 3
 
     def body(carry, scanned):
         x, aux = carry
-        if isinstance(win, np.ndarray):
-            lp, w = scanned
-        else:
-            lp, w = scanned, win
-        x, aux_i = _block_full(cfg, lp, x, w, lut_, backend)
+        lp = scanned["lp"]
+        w = scanned["win"] if isinstance(win, np.ndarray) else win
+        l = scanned["lut"] if per_layer_lut else lut_
+        x, aux_i = _block_full(cfg, lp, x, w, l, backend)
         x = shard(x, "batch", None, None)
         return (x, aux + aux_i), None
 
@@ -161,7 +165,11 @@ def forward_lm(
         )
         body = jax.checkpoint(body, policy=policy)
 
-    xs = (params["layers"], jnp.asarray(win)) if isinstance(win, np.ndarray) else params["layers"]
+    xs: dict = {"lp": params["layers"]}
+    if isinstance(win, np.ndarray):
+        xs["win"] = jnp.asarray(win)
+    if per_layer_lut:
+        xs["lut"] = jnp.asarray(lut_)
     (x, aux), _ = jax.lax.scan(
         body, (x, jnp.float32(0.0)), xs, unroll=True if scan_unroll else 1
     )
@@ -248,7 +256,8 @@ def shard_decode_caches(caches: list[Params], cfg: ModelConfig) -> list[Params]:
     return out
 
 
-def _block_decode(cfg: ModelConfig, lp: Params, x, cache: Params, pos, window):
+def _block_decode(cfg: ModelConfig, lp: Params, x, cache: Params, pos, window,
+                  lut=None):
     new_cache = dict(cache)
     if cfg.rwkv is not None:
         h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
@@ -276,9 +285,9 @@ def _block_decode(cfg: ModelConfig, lp: Params, x, cache: Params, pos, window):
 
     h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
     if cfg.moe is not None:
-        mlp_out, _ = L.moe_ffn(cfg, lp["moe"], h, dropless=True)
+        mlp_out, _ = L.moe_ffn(cfg, lp["moe"], h, lut, dropless=True)
     else:
-        mlp_out = L.ffn(cfg, lp["ffn"], h)
+        mlp_out = L.ffn(cfg, lp["ffn"], h, lut)
     return x + mlp_out, new_cache
 
 
@@ -288,9 +297,17 @@ def decode_step(
     caches: list[Params],
     tokens: jax.Array,   # (B, 1) int32 — the newest token
     pos: jax.Array,      # () int32 — its absolute position
+    *,
+    luts: jax.Array | None = None,   # (L, 16, 16) per-layer LUTs or (16, 16)
 ) -> tuple[jax.Array, list[Params]]:
-    """One serving step: append token at ``pos``, return next-token logits."""
+    """One serving step: append token at ``pos``, return next-token logits.
+
+    ``luts``: optional approximate-multiplier tables routing each layer's
+    MLP matmuls (QoS plan); the decode loop is unrolled per layer, so the
+    per-layer table is just indexed out.
+    """
     win = window_schedule(cfg)
+    luts_ = luts if cfg.approx_mlp else None
     x = params["embed"][tokens].astype(cfg.jnp_dtype)
     x = shard(x, "batch", None, None)
     new_caches: list[Params] = []
@@ -304,7 +321,10 @@ def decode_step(
             w = None if w < 0 else w
         else:
             w = win
-        x, nc = _block_decode(cfg, lp, x, cache, pos, w)
+        lut_i = None
+        if luts_ is not None:
+            lut_i = luts_[i] if jnp.ndim(luts_) == 3 else luts_
+        x, nc = _block_decode(cfg, lp, x, cache, pos, w, lut_i)
         new_caches.append(nc)
     x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]

@@ -14,18 +14,20 @@ from ..core.circuits import Circuit
 
 
 def build_lut(mult_circuit: Circuit) -> np.ndarray:
-    """Evaluate a 4x4-bit multiplier circuit into a (16, 16) int32 LUT.
+    """Evaluate a b-bit two-operand circuit into a (2**b, 2**b) int32 LUT.
 
     Input convention follows :mod:`repro.core.arith`: inputs are
-    ``[a0..a3, b0..b3]`` LSB-first, so assignment index = a + 16*b.
+    ``[a0.., b0..]`` LSB-first, so assignment index = a + 2**b * b'.
+    The classic use is the 4-bit multiplier (a (16, 16) table the Pallas
+    kernel consumes directly); smaller operators lower through
+    :mod:`repro.library.compile`, which tiles/chains them up to 4 bits.
     """
-    assert mult_circuit.n_inputs == 8, "expects a 4-bit multiplier (8 inputs)"
-    vals = mult_circuit.eval_words().astype(np.int32)  # (256,)
-    lut = np.zeros((16, 16), dtype=np.int32)
-    for b in range(16):
-        for a in range(16):
-            lut[a, b] = vals[a + 16 * b]
-    return lut
+    assert mult_circuit.n_inputs % 2 == 0, "expects a two-operand circuit"
+    bits = mult_circuit.n_inputs // 2
+    side = 1 << bits
+    vals = mult_circuit.eval_words().astype(np.int32)  # (2**(2b),)
+    a = np.arange(side)
+    return vals[a[:, None] + side * a[None, :]]
 
 
 def exact_mul_lut() -> np.ndarray:

@@ -1,0 +1,311 @@
+"""Operator library: store round-trip, frontier dominance, LUT lowering,
+QoS selection invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core.arith import benchmark
+from repro.core.baselines import muscat_like
+from repro.core.circuits import Circuit, Op
+from repro.core.synth import area
+from repro.library import (
+    OperatorRecord,
+    OperatorSignature,
+    OperatorStore,
+    ParetoFrontier,
+    compile_record,
+    pareto_front,
+    select_plan,
+    stack_luts,
+)
+from repro.library.compile import (
+    base_table,
+    clear_compile_cache,
+    compile_cache_stats,
+    compile_circuit,
+    exact_lut16,
+)
+from repro.library.qos import measure_sensitivities
+from repro.library.store import circuit_from_dict, circuit_to_dict
+from repro.quant import build_lut
+
+
+@pytest.fixture(scope="module")
+def mul2_ops():
+    """A few sound 2-bit multipliers at different ETs (plus the exact one)."""
+    exact = benchmark("mul_i4")
+    ops = {0: (exact, area(exact))}
+    for et in (1, 2, 4):
+        res = muscat_like(exact, et=et, restarts=2, wall_budget_s=10)
+        ops[et] = (res.circuit, res.area)
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+def test_store_roundtrip_identical_lut(tmp_path, mul2_ops):
+    store = OperatorStore(tmp_path / "lib")
+    circ, a = mul2_ops[2]
+    sig = OperatorSignature("mul", 2, "wce", 2)
+    rec = store.put_circuit(circ, sig, area=a, source="muscat")
+    assert rec.key
+
+    back = store.get(sig, rec.key)
+    assert back.area == rec.area
+    assert back.wce == rec.wce
+    assert back.source == "muscat"
+    # the reloaded netlist must compile to the *identical* LUT
+    np.testing.assert_array_equal(
+        compile_record(back).lut, compile_record(rec).lut
+    )
+    np.testing.assert_array_equal(build_lut(back.circuit), build_lut(circ))
+
+
+def test_store_put_is_idempotent(tmp_path, mul2_ops):
+    store = OperatorStore(tmp_path / "lib")
+    circ, a = mul2_ops[1]
+    sig = OperatorSignature("mul", 2, "wce", 1)
+    r1 = store.put_circuit(circ, sig, area=a)
+    r2 = store.put_circuit(circ, sig, area=a)
+    assert r1.key == r2.key
+    assert len(store) == 1
+
+
+def test_store_rejects_unsound_operator(tmp_path, mul2_ops):
+    store = OperatorStore(tmp_path / "lib")
+    circ, a = mul2_ops[4]  # wce possibly up to 4
+    exact = benchmark("mul_i4")
+    wce = int(np.abs(circ.eval_words().astype(np.int64)
+                     - exact.eval_words().astype(np.int64)).max())
+    if wce == 0:
+        pytest.skip("pruner found an exact circuit; nothing unsound to store")
+    with pytest.raises(ValueError, match="unsound"):
+        store.put_circuit(circ, OperatorSignature("mul", 2, "wce", wce - 1),
+                          area=a)
+
+
+def test_store_query_filters_and_version(tmp_path, mul2_ops):
+    store = OperatorStore(tmp_path / "lib")
+    for et in (1, 2, 4):
+        circ, a = mul2_ops[et]
+        store.put_circuit(circ, OperatorSignature("mul", 2, "wce", et), area=a)
+    assert len(store.query("mul", 2)) == len(store)
+    assert store.query("adder") == []
+    assert {s.threshold for s in store.signatures()} == {1, 2, 4}
+    le2 = store.query("mul", 2, max_threshold=2)
+    assert all(r.signature.threshold <= 2 for r in le2)
+
+    # future format versions are rejected, not misparsed
+    import json
+    path = next((tmp_path / "lib").glob("*/*.json"))
+    doc = json.loads(path.read_text())
+    doc["format_version"] = 999
+    path.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="format_version"):
+        store.query("mul", 2)
+
+
+def test_store_skips_foreign_signature_dirs(tmp_path, mul2_ops):
+    """A merged-in future store (e.g. 8-bit operators) must not break
+    queries over the signatures this reader understands."""
+    store = OperatorStore(tmp_path / "lib")
+    circ, a = mul2_ops[1]
+    store.put_circuit(circ, OperatorSignature("mul", 2, "wce", 1), area=a)
+    (tmp_path / "lib" / "mul8b_wce1").mkdir()
+    (tmp_path / "lib" / "not-a-signature").mkdir()
+    assert len(store.signatures()) == 1
+    assert len(store.query("mul")) == 1
+
+
+def test_circuit_serialization_roundtrip():
+    c = benchmark("adder_i6")
+    back = circuit_from_dict(circuit_to_dict(c))
+    assert np.array_equal(back.eval_words(), c.eval_words())
+    assert back.name == c.name
+
+
+# ---------------------------------------------------------------------------
+# pareto
+# ---------------------------------------------------------------------------
+def _fake_record(a: float, wce: int) -> OperatorRecord:
+    sig = OperatorSignature("mul", 2, "wce", max(wce, 1))
+    return OperatorRecord(signature=sig, circuit=benchmark("mul_i4"),
+                          area=a, wce=wce, mae=float(wce) / 4,
+                          key=f"a{a}w{wce}")
+
+
+def test_pareto_dominated_never_returned():
+    recs = [
+        _fake_record(10.0, 0),
+        _fake_record(8.0, 1),
+        _fake_record(9.0, 2),   # dominated by (8.0, 1)
+        _fake_record(8.0, 3),   # dominated by (8.0, 1)
+        _fake_record(5.0, 3),
+        _fake_record(5.0, 5),   # dominated by (5.0, 3)
+    ]
+    fr = ParetoFrontier(recs)
+    areas = {(r.area, r.wce) for r in fr.front}
+    assert areas == {(10.0, 0), (8.0, 1), (5.0, 3)}
+    for q in (fr.query(), fr.query(max_error=3), fr.query(max_area=8.0)):
+        for r in q:
+            assert (r.area, r.wce) in areas
+    assert fr.best_under_error(2).area == 8.0
+    assert fr.best_under_error(0).area == 10.0
+    assert fr.cheapest().area == 5.0
+    assert fr.most_accurate().wce == 0
+
+
+def test_pareto_front_generic_objectives():
+    pts = [(1, 9), (2, 2), (3, 1), (3, 3), (4, 0), (2, 2)]
+    front = pareto_front(pts, (lambda p: p[0], lambda p: p[1]))
+    assert front == [(1, 9), (2, 2), (3, 1), (4, 0)]
+
+
+# ---------------------------------------------------------------------------
+# compile
+# ---------------------------------------------------------------------------
+def test_exact_2bit_mul_tiles_to_exact_16x16():
+    comp = compile_circuit(benchmark("mul_i4"), "mul", 2)
+    np.testing.assert_array_equal(comp.lut, exact_lut16("mul"))
+    assert comp.wce16 == 0 and comp.mae16 == 0.0
+
+
+def test_exact_2bit_adder_chains_to_exact_16x16():
+    comp = compile_circuit(benchmark("adder_i4"), "adder", 2)
+    np.testing.assert_array_equal(comp.lut, exact_lut16("adder"))
+
+
+def test_exact_3bit_blocks_compose_exactly():
+    """bits=3 is the odd case: the top chunk is 1 bit wide and the final
+    adder carry sits at bit 6, not bit 4."""
+    np.testing.assert_array_equal(
+        compile_circuit(benchmark("mul_i6"), "mul", 3).lut, exact_lut16("mul")
+    )
+    np.testing.assert_array_equal(
+        compile_circuit(benchmark("adder_i6"), "adder", 3).lut,
+        exact_lut16("adder"),
+    )
+
+
+def test_exact_4bit_paths_match_build_lut():
+    mul4 = benchmark("mul_i8")
+    comp = compile_circuit(mul4, "mul", 4)
+    np.testing.assert_array_equal(comp.lut, build_lut(mul4))
+    add4 = benchmark("adder_i8")
+    np.testing.assert_array_equal(
+        compile_circuit(add4, "adder", 4).lut, exact_lut16("adder")
+    )
+
+
+def test_approx_block_tiling_bounds_error(mul2_ops):
+    """Tiling an approximate block keeps the compiled table's wce finite and
+    >= the block-level wce signal (errors compose, never vanish)."""
+    circ, _ = mul2_ops[2]
+    base = base_table(circ, 2)
+    block_err = np.abs(base - exact_lut16("mul")[:4, :4]).max()
+    comp = compile_circuit(circ, "mul", 2)
+    # each of the 4 chunk products contributes <= block_err * 2**(2*(i+j))
+    assert comp.wce16 <= block_err * (1 + 4 + 4 + 16)
+    if block_err > 0:
+        assert comp.wce16 > 0
+
+
+def test_compile_cache_hits(tmp_path, mul2_ops):
+    clear_compile_cache()
+    store = OperatorStore(tmp_path / "lib")
+    circ, a = mul2_ops[1]
+    rec = store.put_circuit(circ, OperatorSignature("mul", 2, "wce", 1), area=a)
+    c1 = compile_record(rec)
+    c2 = compile_record(rec)
+    assert c1 is c2
+    stats = compile_cache_stats()
+    assert stats["hits"] >= 1 and stats["misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# qos
+# ---------------------------------------------------------------------------
+def _operator_set():
+    """Three synthetic frontier operators (area descending, error ascending)."""
+    ops = []
+    for key, a, mae in (("fine", 8.0, 0.1), ("mid", 5.0, 0.5), ("coarse", 2.0, 2.0)):
+        rec = _fake_record(a, int(mae * 4))
+        rec.key = key
+        lut = exact_lut16("mul") + np.full((16, 16), 0, dtype=np.int64)
+        from repro.library.compile import CompiledLut
+        ops.append((rec, CompiledLut(lut.astype(np.int32), "mul", 2, int(mae * 4), mae)))
+    return ops
+
+
+def test_qos_budget_monotonicity():
+    ops = _operator_set()
+    sens = np.array([0.3, 1.0, 0.1, 2.0, 0.5])
+    budgets = [0.0, 0.05, 0.2, 0.5, 1.0, 2.0, 5.0, 50.0]
+    areas = [
+        select_plan(ops, sens, b, exact_area=10.0).total_area for b in budgets
+    ]
+    # tighter budget => total area no smaller
+    assert all(a1 >= a2 - 1e-12 for a1, a2 in zip(areas, areas[1:])), areas
+    # zero budget with positive sensitivities => everything exact
+    assert areas[0] == 10.0 * len(sens)
+    # huge budget => everything on the cheapest operator
+    assert areas[-1] == 2.0 * len(sens)
+
+
+def test_qos_respects_budget_and_insensitive_layers():
+    ops = _operator_set()
+    sens = np.array([0.0, 1.0])        # layer 0 is free to downgrade
+    plan = select_plan(ops, sens, 0.0, exact_area=10.0)
+    assert plan.choices[0].key == "coarse"   # free downgrades always taken
+    assert plan.choices[1].key is None       # budget 0 pins sensitive layers
+    assert plan.predicted_total <= 0.0 + 1e-12
+
+    plan2 = select_plan(ops, sens, 0.55, exact_area=10.0)
+    assert plan2.predicted_total <= 0.55
+    assert plan2.choices[1].key == "mid"     # one affordable downgrade
+
+
+def test_qos_stack_and_sensitivity_probe():
+    ops = _operator_set()
+    plan = select_plan(ops, np.zeros(3), 0.0, exact_area=10.0)
+    stack = stack_luts(plan, ops)
+    assert stack.shape == (3, 16, 16) and stack.dtype == np.int32
+
+    probe = ops[-1][1]
+    drifts = {0: 0.6, 1: 0.0, 2: 1.2}
+    sens = measure_sensitivities(
+        lambda luts: drifts[next(i for i, l in enumerate(luts) if l is not None)],
+        3, probe,
+    )
+    np.testing.assert_allclose(sens, [0.6 / probe.mae16, 0.0, 1.2 / probe.mae16])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: search sink -> store -> frontier -> per-layer matmul routing
+# ---------------------------------------------------------------------------
+def test_library_end_to_end_routes_matmul(tmp_path, mul2_ops):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    store = OperatorStore(tmp_path / "lib")
+    for et in (1, 2, 4):
+        circ, a = mul2_ops[et]
+        store.put_circuit(circ, OperatorSignature("mul", 2, "wce", et), area=a)
+    fr = ParetoFrontier.from_store(store, "mul", 2)
+    assert len(fr) >= 1
+    rec = fr.best_under_error(4)
+    comp = compile_record(rec)
+
+    rng = np.random.default_rng(0)
+    a_ = rng.integers(0, 16, (8, 16), dtype=np.int64)
+    b_ = rng.integers(0, 16, (16, 8), dtype=np.int64)
+    got = np.asarray(kops.approx_matmul(
+        jnp.asarray(a_, jnp.int32), jnp.asarray(b_, jnp.int32),
+        jnp.asarray(comp.lut), backend="ref",
+    ))
+    # reference: out[m, n] = sum_k LUT[a[m,k], b[k,n]]
+    want = np.einsum("mkn->mn", comp.lut[a_[:, :, None],
+                                         np.broadcast_to(b_[None], (8, 16, 8))])
+    np.testing.assert_array_equal(got, want)

@@ -5,11 +5,13 @@ import pytest
 
 from repro.core.arith import benchmark
 from repro.core.baselines import mecals_like, muscat_like, random_sound
-from repro.core.miter import MiterZ3, worst_case_error
+from repro.core.miter import HAVE_Z3, MiterZ3, worst_case_error
 from repro.core.search import progressive_search
 from repro.core.synth import area
 from repro.core.templates import SharedTemplate
 from repro.core.tensor_search import tensor_search
+
+needs_z3 = pytest.mark.skipif(not HAVE_Z3, reason="z3-solver not installed")
 
 
 @pytest.fixture(scope="module")
@@ -17,6 +19,7 @@ def adder4():
     return benchmark("adder_i4")
 
 
+@needs_z3
 def test_progressive_shared_beats_exact_area(adder4):
     rep = progressive_search(adder4, et=1, method="shared",
                              wall_budget_s=90, timeout_ms=15_000)
@@ -26,6 +29,7 @@ def test_progressive_shared_beats_exact_area(adder4):
         assert worst_case_error(adder4, r.circuit) <= 1
 
 
+@needs_z3
 def test_progressive_xpat_finds_sound_result(adder4):
     rep = progressive_search(adder4, et=1, method="xpat",
                              wall_budget_s=90, timeout_ms=15_000)
@@ -33,6 +37,7 @@ def test_progressive_xpat_finds_sound_result(adder4):
     assert worst_case_error(adder4, rep.best.circuit) <= 1
 
 
+@needs_z3
 def test_shared_at_most_xpat_area(adder4):
     """The paper's headline claim at benchmark scale (ET=2)."""
     rs = progressive_search(adder4, et=2, method="shared",
@@ -62,6 +67,7 @@ def test_random_sound_cloud(adder4):
         assert a >= 0 and prox["PIT"] >= 0
 
 
+@needs_z3
 def test_tensor_search_with_smt_seed(adder4):
     tpl = SharedTemplate(4, 3, pit=6)
     seed = MiterZ3(adder4, tpl).solve(et=2, its=6, timeout_ms=30_000)
