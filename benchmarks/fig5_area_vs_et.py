@@ -20,8 +20,8 @@ import time
 
 from repro.core.arith import benchmark, parse_benchmark_name
 from repro.core.baselines import mecals_like, muscat_like
+from repro.core.engine import SearchJob, get_engine
 from repro.core.miter import HAVE_Z3, MiterZ3, worst_case_error
-from repro.core.search import progressive_search
 from repro.core.synth import area
 from repro.core.templates import SharedTemplate
 from repro.core.tensor_search import tensor_search
@@ -45,20 +45,22 @@ def run(bench: str, ets: list[int], budget_s: float = 90.0,
         row = {"bench": bench, "et": et, "exact_area": exact_area}
         t0 = time.time()
         if HAVE_Z3:
-            rs = progressive_search(exact, et=et, method="shared",
-                                    wall_budget_s=budget_s, timeout_ms=20_000,
-                                    sink=store.sink(sig, "shared"))
-            rx = progressive_search(exact, et=et, method="xpat",
-                                    wall_budget_s=budget_s, timeout_ms=20_000,
-                                    sink=store.sink(sig, "xpat"))
-            # soundness re-verification of every winner
-            for rep in (rs, rx):
-                if rep.best is not None:
-                    assert worst_case_error(exact, rep.best.circuit) <= et
+            # the paper's two SMT methods through the unified engine layer;
+            # every Candidate streams into the store as it is found
+            for method in ("shared", "xpat"):
+                eng = get_engine(method, timeout_ms=20_000,
+                                 sink=store.sink(sig, method))
+                outcome = eng.run(SearchJob(benchmark=kind, bits=bits, et=et,
+                                            engine=method, budget_s=budget_s))
+                # soundness re-verification of every winner
+                if outcome.best is not None:
+                    assert worst_case_error(exact, outcome.best.circuit) <= et
+        # engine-registry source names ("muscat"/"mecals", same as the fleet
+        # and search CLI write) so one shared library credits every producer
         rm = muscat_like(exact, et=et, restarts=3, wall_budget_s=budget_s / 3)
-        store.put_circuit(rm.circuit, sig, area=rm.area, source="muscat_like")
+        store.put_circuit(rm.circuit, sig, area=rm.area, source="muscat")
         rc = mecals_like(exact, et=et, wall_budget_s=budget_s / 3)
-        store.put_circuit(rc.circuit, sig, area=rc.area, source="mecals_like")
+        store.put_circuit(rc.circuit, sig, area=rc.area, source="mecals")
 
         # beyond-paper hybrid: loose-SMT seed -> tensor minimization
         if HAVE_Z3:
@@ -69,12 +71,13 @@ def run(bench: str, ets: list[int], budget_s: float = 90.0,
             if seed is not None:
                 th = tensor_search(exact, et=et, pit=pool, population=4096,
                                    generations=80, seeds=[seed])
-                for r in th.results:
+                for r in th.results:   # unified Candidates
                     store.put_circuit(r.circuit, sig, area=r.area,
-                                      source="hybrid", params=r.params)
+                                      source="hybrid", params=r.params,
+                                      proxies=r.proxies)
 
         # the row's "best" is now a frontier query over the library
-        for name in ("shared", "xpat", "muscat_like", "mecals_like", "hybrid"):
+        for name in ("shared", "xpat", "muscat", "mecals", "hybrid"):
             best = frontier(name).best_under_error(et)
             row[name] = best.area if best is not None else None
         row["wall_s"] = round(time.time() - t0, 1)

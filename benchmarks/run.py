@@ -33,7 +33,7 @@ def main() -> None:
         rows.append((
             f"fig5_{r['bench']}_et{r['et']}", r["wall_s"] * 1e6,
             f"shared={r['shared']};xpat={r['xpat']};"
-            f"muscat~={r['muscat_like']};mecals~={r['mecals_like']};"
+            f"muscat~={r['muscat']};mecals~={r['mecals']};"
             f"hybrid={r['hybrid']};exact={r['exact_area']}",
         ))
 

@@ -52,7 +52,7 @@ if seed is not None:
                        generations=120, seeds=[seed])
     if th.best:
         print(f"  hybrid: {th.best.area} µm² (proxies {th.best.proxies}) "
-              f"after {th.evaluations} tensorized evaluations")
+              f"after {th.stats['evaluations']} tensorized evaluations")
         if th.best.area < best.area:
             best = th.best
 

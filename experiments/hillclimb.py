@@ -1,12 +1,15 @@
 """§Perf hillclimb driver: baseline -> iterations for the 3 selected pairs.
 
 Each iteration re-lowers the cell with one change enabled and records the
-roofline record under a tagged filename in experiments/perf/.
+roofline record under a tagged filename in experiments/perf/.  Per-pair
+results are reported through the unified
+:class:`~repro.core.engine.SearchOutcome` — the same type the operator
+searches emit — so winner selection is its generic pareto/min_by
+machinery, not ad-hoc dict plumbing.
 
     PYTHONPATH=src python experiments/hillclimb.py
 """
 
-import json
 import os
 import sys
 import time
@@ -14,7 +17,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
-from repro.library.pareto import pareto_front  # noqa: E402
+from repro.core.engine import SearchOutcome  # noqa: E402
 
 OUT = os.path.join(os.path.dirname(__file__), "perf")
 
@@ -47,28 +50,42 @@ def _t_step(rec: dict) -> float:
 
 def main() -> None:
     os.makedirs(OUT, exist_ok=True)
-    by_pair: dict[tuple, list] = {}
+    by_pair: dict[tuple, SearchOutcome] = {}
+    t_start = time.time()
     for arch, shape, tag, kw in STEPS:
         t0 = time.time()
+        outcome = by_pair.setdefault(
+            (arch, shape),
+            SearchOutcome(engine="perf_hillclimb", benchmark=f"{arch}/{shape}",
+                          stats={"iterations": 0, "errors": 0}),
+        )
         rec = run_cell(arch, shape, multi_pod=False, out_dir=OUT, tag=tag, **kw)
+        outcome.stats["iterations"] += 1
         if rec["status"] == "ok":
             rec["tag"] = tag
-            by_pair.setdefault((arch, shape), []).append(rec)
+            outcome.results.append(rec)
             print(f"{arch:24s} {shape:10s} {tag:22s} "
                   f"t_comp={rec['t_compute']:.3g}s t_mem={rec['t_memory']:.3g}s "
                   f"t_coll={rec['t_collective']:.3g}s "
                   f"roofline={rec['roofline_fraction']:.4f} "
                   f"({time.time()-t0:.0f}s)", flush=True)
         else:
+            outcome.stats["errors"] += 1
+            outcome.error = f"{tag}: {rec.get('error', rec['status'])[:200]}"
             print(f"{arch} {shape} {tag} -> {rec['status']}: "
                   f"{rec.get('error','')[:200]}", flush=True)
 
     # pick winners by dominance over (modelled step time, HBM traffic),
     # not by eyeballing the log — same machinery as the operator library.
-    for (arch, shape), recs in by_pair.items():
-        front = pareto_front(recs, (_t_step, lambda r: r["hlo_bytes"]))
+    for (arch, shape), outcome in by_pair.items():
+        outcome.wall_s = time.time() - t_start
+        if not outcome.results:
+            print(f"{arch} {shape}: no successful iterations "
+                  f"({outcome.error})", flush=True)
+            continue
+        front = outcome.pareto((_t_step, lambda r: r["hlo_bytes"]))
         tags = ", ".join(r["tag"] for r in front)
-        best = front[0]
+        best = outcome.min_by(_t_step)
         print(f"{arch} {shape}: pareto iterations [{tags}]; "
               f"fastest {best['tag']} at t_step={_t_step(best):.3g}s", flush=True)
 

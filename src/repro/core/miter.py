@@ -33,6 +33,7 @@ from .templates import NonsharedTemplate, SharedTemplate, TemplateParams
 HAVE_Z3 = z3 is not None
 
 __all__ = [
+    "measure_error",
     "worst_case_error",
     "values_from_tables",
     "MiterZ3",
@@ -47,12 +48,23 @@ def values_from_tables(tables: np.ndarray, n_inputs: int) -> np.ndarray:
     return (bits.astype(np.uint64) * weights[:, None]).sum(axis=0)
 
 
+def measure_error(circuit: Circuit, exact_values: np.ndarray) -> tuple[int, float]:
+    """Exhaustive ``(wce, mae)`` of a candidate against the exact outputs.
+
+    The one measurement every consumer shares — engine harvests
+    (:func:`repro.core.engine.verify_circuit`) and store writes
+    (:meth:`repro.library.OperatorStore.put_circuit`) — so new error
+    metrics (mae/mse bounds, ROADMAP) extend a single definition.
+    """
+    err = np.abs(circuit.eval_words().astype(np.int64)
+                 - exact_values.astype(np.int64))
+    return int(err.max()), float(err.mean())
+
+
 def worst_case_error(exact: Circuit, approx: Circuit) -> int:
     """Exhaustive worst-case |exact - approx| over all assignments."""
     assert exact.n_inputs == approx.n_inputs
-    ev = exact.eval_words().astype(np.int64)
-    av = approx.eval_words().astype(np.int64)
-    return int(np.abs(ev - av).max())
+    return measure_error(approx, exact.eval_words())[0]
 
 
 def params_sound(

@@ -24,15 +24,14 @@ same proxy-constrained SMT queries, better schedule):
    template parameter.
 
 Every Z3 model is re-verified exhaustively before being trusted
-(:func:`repro.core.miter.params_sound`).
+(:func:`repro.core.miter.params_sound`).  Results are reported as the
+unified :class:`~repro.core.engine.SearchOutcome` — the same type every
+other engine emits — with grid/SAT counters in ``outcome.stats``.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-
-import numpy as np
 
 try:
     import z3
@@ -40,42 +39,11 @@ except ImportError:  # pragma: no cover - exercised on z3-less images
     z3 = None
 
 from .circuits import Circuit
+from .engine import Candidate, SearchOutcome, UnsoundResultError, harvest
 from .miter import MiterZ3, params_sound
-from .synth import area, synthesize
 from .templates import NonsharedTemplate, SharedTemplate, TemplateParams
 
-__all__ = ["SearchResult", "SearchReport", "progressive_search"]
-
-
-@dataclass
-class SearchResult:
-    """One sound approximation found during the search."""
-
-    params: TemplateParams
-    circuit: Circuit              # synthesized netlist
-    area: float
-    proxies: dict[str, int]
-    grid_point: tuple[int, int]
-    wall_s: float
-
-    @property
-    def proxy_score(self) -> int:
-        return sum(self.proxies.values())
-
-
-@dataclass
-class SearchReport:
-    method: str
-    benchmark: str
-    et: int
-    results: list[SearchResult] = field(default_factory=list)
-    grid_points_tried: int = 0
-    sat_points: int = 0
-    wall_s: float = 0.0
-
-    @property
-    def best(self) -> SearchResult | None:
-        return min(self.results, key=lambda r: r.area) if self.results else None
+__all__ = ["progressive_search", "main"]
 
 
 class _Session:
@@ -94,7 +62,10 @@ class _Session:
         self.sink = sink
         self.exact_values = exact.eval_words()
         self.miters: dict[int, MiterZ3] = {}
-        self.report = SearchReport(method=method, benchmark=exact.name, et=et)
+        self.outcome = SearchOutcome(
+            engine=method, benchmark=exact.name, et=et,
+            stats={"grid_points_tried": 0, "sat_points": 0},
+        )
 
     def out_of_budget(self) -> bool:
         return time.time() - self.t_start > self.budget_s
@@ -117,7 +88,7 @@ class _Session:
         secondary: int | None,
         extra: list | None = None,
     ) -> TemplateParams | None:
-        self.report.grid_points_tried += 1
+        self.outcome.stats["grid_points_tried"] += 1
         miter = self.miter(primary)
         solver = z3.Solver()
         solver.set("timeout", self.timeout_ms)
@@ -132,25 +103,26 @@ class _Session:
             return None
         params = miter._decode(solver.model())
         if not params_sound(miter.template, params, self.exact_values, self.et):
-            raise AssertionError("Z3 model failed exhaustive re-verification")
+            raise UnsoundResultError(
+                f"Z3 model failed exhaustive re-verification "
+                f"({self.exact.name}, method={self.method}, ET={self.et}, "
+                f"primary={primary}, secondary={secondary})"
+            )
         return params
 
-    def record(self, primary: int, secondary: int, params: TemplateParams) -> SearchResult:
+    def record(self, primary: int, secondary: int, params: TemplateParams) -> Candidate:
         tpl = self.miter(primary).template
-        circuit = synthesize(tpl.instantiate(params, name=f"{self.exact.name}_approx"))
-        res = SearchResult(
-            params=params,
-            circuit=circuit,
-            area=area(circuit, presynthesized=True),
-            proxies=tpl.proxies(params),
-            grid_point=(primary, secondary),
+        cand = harvest(
+            tpl, params, self.exact_values, self.et, engine=self.method,
+            name=f"{self.exact.name}_approx",
             wall_s=time.time() - self.t_start,
+            meta={"grid_point": [primary, secondary]},
         )
-        self.report.results.append(res)
-        self.report.sat_points += 1
+        self.outcome.results.append(cand)
+        self.outcome.stats["sat_points"] += 1
         if self.sink is not None:
-            self.sink(res)
-        return res
+            self.sink(cand)
+        return cand
 
     # -- literal tightening ---------------------------------------------------
     def tighten(self, primary: int, secondary: int) -> None:
@@ -199,14 +171,14 @@ def progressive_search(
     seed: int = 0,
     tighten: bool = True,
     sink=None,
-) -> SearchReport:
+) -> SearchOutcome:
     """Run the progressive search for one benchmark and ET.
 
     ``method``: ``"shared"`` (the paper) or ``"xpat"`` (nonshared baseline).
     ``sink``: optional callable invoked with every sound
-    :class:`SearchResult` as it is found — e.g.
+    :class:`~repro.core.engine.Candidate` as it is found — e.g.
     ``repro.library.OperatorStore.sink(...)`` to persist the whole Pareto
-    sweep instead of keeping only ``report.best``.
+    sweep instead of keeping only ``outcome.best``.
     """
     if z3 is None:
         raise RuntimeError(
@@ -237,8 +209,8 @@ def progressive_search(
             sess.record(primary, primary, params)
             break
     if frontier is None:
-        sess.report.wall_s = time.time() - sess.t_start
-        return sess.report
+        sess.outcome.wall_s = time.time() - sess.t_start
+        return sess.outcome
 
     # tighten primary: walk down from the frontier until UNSAT
     lo = (frontier // 2) + 1 if frontier > 1 else 1
@@ -278,8 +250,8 @@ def progressive_search(
         if method == "shared" and m > best_primary + 1 and not sess.out_of_budget():
             sess.tighten(m, 1)
 
-    sess.report.wall_s = time.time() - sess.t_start
-    return sess.report
+    sess.outcome.wall_s = time.time() - sess.t_start
+    return sess.outcome
 
 
 # ---------------------------------------------------------------------------
@@ -289,23 +261,24 @@ def main(argv: list[str] | None = None) -> None:
     """``python -m repro.core.search --benchmark mul_i4 --et 1 2 4
     --library runs/lib`` — search and persist every sound result.
 
-    ``--method auto`` uses the paper's SMT search when z3 is available and
-    falls back to the sound non-SMT engines (muscat / tensor) otherwise,
-    so library filling works on solver-less images too.
+    One-benchmark front-end over the unified engine registry
+    (:mod:`repro.core.engine`); sweeps over many benchmarks / engines are
+    ``python -m repro.fleet``'s job.  ``--method auto`` uses the paper's
+    SMT search when z3 is available and falls back to the annealer
+    otherwise, so library filling works on solver-less images too.
     """
     import argparse
 
-    from ..library import OperatorSignature, OperatorStore
-    from .arith import benchmark, parse_benchmark_name
-    from .baselines import muscat_like
-    from .tensor_search import tensor_search
+    from ..library import OperatorStore
+    from .arith import parse_benchmark_name
+    from .engine import ENGINE_NAMES, SearchJob, get_engine
 
     ap = argparse.ArgumentParser(description=main.__doc__)
     ap.add_argument("--benchmark", default="mul_i4",
                     help="e.g. mul_i4 (2-bit), mul_i8 (4-bit), adder_i4")
     ap.add_argument("--et", type=int, nargs="+", default=[1, 2, 4])
     ap.add_argument("--method", default="auto",
-                    choices=["auto", "shared", "xpat", "muscat", "tensor"])
+                    choices=["auto", *ENGINE_NAMES])
     ap.add_argument("--library", default=None,
                     help="operator-store directory to sink results into")
     ap.add_argument("--budget-s", type=float, default=60.0)
@@ -314,43 +287,30 @@ def main(argv: list[str] | None = None) -> None:
 
     try:
         kind, bits = parse_benchmark_name(args.benchmark)
-        exact = benchmark(args.benchmark)
     except KeyError:
         ap.error(f"unknown benchmark {args.benchmark!r} "
                  "(expected e.g. mul_i4, adder_i6, mul_i8)")
     method = args.method
     if method == "auto":
-        method = "shared" if z3 is not None else "muscat"
+        method = "shared" if z3 is not None else "anneal"
         print(f"--method auto -> {method} (z3 {'available' if z3 else 'missing'})")
 
     store = OperatorStore(args.library) if args.library else None
     for et in args.et:
-        sig = OperatorSignature(kind, bits, "wce", et)
-        n_before = len(store) if store is not None else 0
-        if method in ("shared", "xpat"):
-            sink = store.sink(sig, method) if store is not None else None
-            rep = progressive_search(exact, et=et, method=method,
-                                     wall_budget_s=args.budget_s,
-                                     seed=args.seed, sink=sink)
-            best = rep.best
-        elif method == "muscat":
-            res = muscat_like(exact, et=et, restarts=3, seed=args.seed,
-                              wall_budget_s=args.budget_s)
-            if store is not None:
-                store.put_circuit(res.circuit, sig, area=res.area,
-                                  source="muscat", meta={"wall_s": res.wall_s})
-            best = res
-        else:  # tensor
-            rep = tensor_search(exact, et=et, seed=args.seed,
-                                wall_budget_s=args.budget_s)
-            if store is not None:
-                for r in rep.results:
-                    store.put_circuit(r.circuit, sig, area=r.area,
-                                      source="tensor", proxies=r.proxies,
-                                      params=r.params,
-                                      meta={"wall_s": r.wall_s})
-            best = rep.best
-        stored = (len(store) - n_before) if store is not None else 0
+        job = SearchJob(benchmark=kind, bits=bits, et=et, engine=method,
+                        budget_s=args.budget_s, seed=args.seed)
+        outcome = get_engine(method).run(job)
+        stored = 0
+        if store is not None:
+            sig = job.signature()
+            n_before = len(store)
+            for cand in outcome.results:
+                store.put_circuit(cand.circuit, sig, area=cand.area,
+                                  source=method, proxies=cand.proxies,
+                                  params=cand.params,
+                                  meta={**cand.meta, "wall_s": cand.wall_s})
+            stored = len(store) - n_before
+        best = outcome.best
         print(f"{args.benchmark} ET={et:3d} [{method}]: "
               + (f"best area {best.area} µm²" if best else "no sound result")
               + (f", {stored} new operator(s) -> {args.library}"

@@ -19,7 +19,6 @@ synthesized for true area.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -27,33 +26,10 @@ import numpy as np
 
 from ..kernels import ops
 from .circuits import Circuit, input_truth_tables
-from .synth import area, synthesize
+from .engine import SearchOutcome, harvest
 from .templates import IGNORE, SharedTemplate, TemplateParams
 
-__all__ = ["TensorSearchReport", "tensor_search"]
-
-
-@dataclass
-class TensorSearchReport:
-    benchmark: str
-    et: int
-    results: list = field(default_factory=list)  # list[SearchResult-like]
-    generations: int = 0
-    evaluations: int = 0
-    wall_s: float = 0.0
-
-    @property
-    def best(self):
-        return min(self.results, key=lambda r: r.area) if self.results else None
-
-
-@dataclass
-class TensorResult:
-    params: TemplateParams
-    circuit: Circuit
-    area: float
-    proxies: dict[str, int]
-    wall_s: float
+__all__ = ["tensor_search"]
 
 
 def _proxy_score(lits: jax.Array, sel: jax.Array) -> jax.Array:
@@ -81,16 +57,30 @@ def tensor_search(
     keep: int = 16,
     seeds: list[TemplateParams] | None = None,
     wall_budget_s: float | None = None,
-) -> TensorSearchReport:
+    mesh: jax.sharding.Mesh | None = None,
+) -> SearchOutcome:
     """Evolve shared-template parameters toward minimal-area sound circuits.
 
     ``seeds``: optional known-good parameter assignments (e.g. from a loose
     SMT query) injected into the initial population — the hybrid
     SMT-feasible / tensor-minimize mode (DESIGN.md §4).
+
+    ``mesh``: optional jax mesh with a ``data`` axis (e.g.
+    :func:`repro.launch.mesh.make_fleet_mesh`).  The population axis is
+    sharded over it, so one fleet worker drives every local device; the
+    per-generation elite argsort is the only cross-shard collective.
     """
     n, m = exact.n_inputs, exact.n_outputs
     T = pit if pit is not None else 2 * m
     tpl = SharedTemplate(n, m, pit=T)
+    pop_sharding = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        n_shards = mesh.shape["data"]
+        # population must tile evenly over the data axis; round up
+        population += (-population) % n_shards
+        pop_sharding = NamedSharding(mesh, PartitionSpec("data"))
     in_tt = jnp.asarray(input_truth_tables(n))
     exact_vals = jnp.asarray(exact.eval_words().astype(np.int32))
     key = jax.random.PRNGKey(seed)
@@ -126,6 +116,9 @@ def tensor_search(
         c_sel = jnp.where(mut_s, 1 - c_sel, c_sel)
         lits = jnp.concatenate([elite_lits, c_lits])
         sel = jnp.concatenate([elite_sel, c_sel])
+        if pop_sharding is not None:  # keep the population sharded over data
+            lits = jax.lax.with_sharding_constraint(lits, pop_sharding)
+            sel = jax.lax.with_sharding_constraint(sel, pop_sharding)
         return k5, lits, sel
 
     # init population: IGNORE-biased literals (small products are the useful
@@ -148,22 +141,29 @@ def tensor_search(
             lits = lits.at[row:end].set(jnp.asarray(s_lits)[None])
             sel = sel.at[row:end].set(jnp.asarray(s_sel)[None])
             row = end
+    if pop_sharding is not None:
+        lits = jax.device_put(lits, pop_sharding)
+        sel = jax.device_put(sel, pop_sharding)
 
-    report = TensorSearchReport(benchmark=exact.name, et=et)
+    outcome = SearchOutcome(engine="tensor", benchmark=exact.name, et=et,
+                            stats={"generations": 0, "evaluations": 0})
     for g in range(generations):
         if wall_budget_s is not None and time.time() - t0 > wall_budget_s:
             break
         key, lits, sel = step(key, lits, sel)
-        report.generations += 1
-        report.evaluations += population
+        outcome.stats["generations"] += 1
+        outcome.stats["evaluations"] += population
 
-    # harvest: exhaustively re-verify + synthesize the distinct elites
+    # harvest: exhaustively re-verify + synthesize the distinct elites.
+    # harvest() raises a descriptive UnsoundResultError if the synthesized
+    # netlist disagrees with the template-eval fitness (a kernel bug) —
+    # fleet workers report the failing job instead of dying on an assert.
     fit, wce = fitness(lits, sel)
     order = np.asarray(jnp.argsort(fit))
     exact_np = exact.eval_words()
     seen: set[bytes] = set()
     for idx in order:
-        if len(report.results) >= keep or float(fit[idx]) >= float(BIG):
+        if len(outcome.results) >= keep or float(fit[idx]) >= float(BIG):
             break
         p = TemplateParams(
             np.asarray(lits[idx], dtype=np.int8), np.asarray(sel[idx]).astype(bool)
@@ -172,18 +172,10 @@ def tensor_search(
         if fingerprint in seen:
             continue
         seen.add(fingerprint)
-        circ = synthesize(tpl.instantiate(p, name=f"{exact.name}_tensor"))
-        vals = circ.eval_words().astype(np.int64)
-        got_wce = int(np.abs(vals - exact_np.astype(np.int64)).max())
-        assert got_wce <= et, "tensor search candidate failed re-verification"
-        report.results.append(
-            TensorResult(
-                params=p,
-                circuit=circ,
-                area=area(circ, presynthesized=True),
-                proxies=tpl.proxies(p),
-                wall_s=time.time() - t0,
-            )
+        outcome.results.append(
+            harvest(tpl, p, exact_np, et, engine="tensor",
+                    name=f"{exact.name}_tensor", wall_s=time.time() - t0,
+                    meta={"fitness": float(fit[idx])})
         )
-    report.wall_s = time.time() - t0
-    return report
+    outcome.wall_s = time.time() - t0
+    return outcome

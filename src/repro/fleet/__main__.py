@@ -1,0 +1,80 @@
+"""``python -m repro.fleet --library <dir> --sweep <spec>`` — run a sweep
+and report how much denser the operator frontier got.
+
+Exit status is non-zero when ``--min-new`` is set and the sweep added
+fewer operators than that (CI smoke gate); resumed no-op runs pass with
+``--min-new 0`` (the default).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from ..library.pareto import frontier_sizes
+from ..library.store import OperatorStore
+from .plan import SWEEPS, load_spec, plan_jobs
+from .worker import run_sweep
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.fleet",
+        description="Fill the approximate-operator library with a job fleet.",
+    )
+    ap.add_argument("--library", required=True,
+                    help="shared operator-store directory (created if missing)")
+    ap.add_argument("--sweep", default="smoke",
+                    help=f"preset ({', '.join(SWEEPS)}) or JSON spec path")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-pool size for CPU engines "
+                         "(default: min(4, cpu count); 0/1 = sequential)")
+    ap.add_argument("--budget-s", type=float, default=None,
+                    help="override the spec's per-job wall budget")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the spec's base seed")
+    ap.add_argument("--min-new", type=int, default=0,
+                    help="fail unless at least this many operators were added")
+    args = ap.parse_args(argv)
+
+    spec = load_spec(args.sweep, budget_s=args.budget_s, seed=args.seed)
+    workers = args.workers
+    if workers is None:
+        import os
+
+        workers = min(4, os.cpu_count() or 1)
+
+    store = OperatorStore(args.library)
+    before = frontier_sizes(store)
+    n_before = sum(n for n, _ in before.values())
+    print(f"sweep {spec.name!r}: {len(plan_jobs(spec))} job(s) -> "
+          f"{args.library} ({n_before} operator(s) already stored)")
+    t0 = time.time()
+    results = run_sweep(spec, args.library, workers=workers)
+    after = frontier_sizes(store)
+
+    # ---- frontier-densification report ------------------------------------
+    n_after = sum(n for n, _ in after.values())
+    added = n_after - n_before
+    print(f"\nfrontier densification ({time.time() - t0:.1f}s wall):")
+    print(f"  {'signature':18s} {'records':>15s} {'frontier':>15s}")
+    for name in sorted(set(before) | set(after)):
+        nb, fb = before.get(name, (0, 0))
+        na, fa = after.get(name, (0, 0))
+        print(f"  {name:18s} {nb:6d} -> {na:<6d} {fb:6d} -> {fa:<6d}")
+    n_ok = sum(r.status == "ok" for r in results)
+    n_skip = sum(r.status == "skipped" for r in results)
+    n_fail = sum(r.status == "failed" for r in results)
+    print(f"jobs: {n_ok} ok, {n_skip} resumed/skipped, {n_fail} failed; "
+          f"{added} operator(s) added under "
+          f"{sum(1 for s in after if after[s][0] > before.get(s, (0, 0))[0])} "
+          f"signature(s)")
+    if added < args.min_new:
+        print(f"FAIL: added {added} < --min-new {args.min_new}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

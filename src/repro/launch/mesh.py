@@ -38,6 +38,16 @@ def make_smoke_mesh():
     return jax.make_mesh((1, n), ("data", "model"), **_axis_kw(2))
 
 
+def make_fleet_mesh():
+    """All local devices on one ``data`` axis — the search-fleet layout.
+
+    ``repro.core.tensor_search`` shards its candidate population over
+    ``data``, so a single fleet worker drives every chip it can see; the
+    per-generation elite selection is the only cross-device collective.
+    """
+    return jax.make_mesh((jax.device_count(),), ("data",), **_axis_kw(1))
+
+
 # TPU v5e hardware constants (per chip) — the roofline denominators.
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s
 HBM_BW = 819e9                 # bytes/s

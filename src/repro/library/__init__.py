@@ -35,24 +35,38 @@ repro.core.search --library <dir>``), ``examples/approx_inference.py`` and
 ``repro.launch.analysis`` reports which operator each layer used.
 """
 
-from .compile import (
-    CompiledLut,
-    clear_compile_cache,
-    compile_circuit,
-    compile_record,
-    load_mul_frontier,
-)
-from .pareto import ParetoFrontier, pareto_front
-from .qos import (
-    LayerPlan,
-    measure_layer_costs,
-    measure_sensitivities,
-    select_plan,
-    stack_luts,
-)
+from .pareto import ParetoFrontier, frontier_sizes, pareto_front
 from .store import OperatorRecord, OperatorSignature, OperatorStore
 
+# compile/qos pull in the jax kernel stack; they are lazy (PEP 562) so
+# CPU-only consumers — fleet fork-pool workers above all — can use the
+# store and frontiers without ever importing jax.
+_LAZY = {
+    "CompiledLut": ".compile",
+    "clear_compile_cache": ".compile",
+    "compile_circuit": ".compile",
+    "compile_record": ".compile",
+    "load_mul_frontier": ".compile",
+    "LayerPlan": ".qos",
+    "measure_layer_costs": ".qos",
+    "measure_sensitivities": ".qos",
+    "select_plan": ".qos",
+    "stack_luts": ".qos",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from importlib import import_module
+
+        value = getattr(import_module(_LAZY[name], __name__), name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
+    "frontier_sizes",
     "OperatorStore",
     "OperatorRecord",
     "OperatorSignature",

@@ -15,7 +15,7 @@ from .store import OperatorRecord, OperatorStore
 
 T = TypeVar("T")
 
-__all__ = ["dominates", "pareto_front", "ParetoFrontier"]
+__all__ = ["dominates", "pareto_front", "ParetoFrontier", "frontier_sizes"]
 
 
 def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
@@ -97,3 +97,16 @@ class ParetoFrontier:
 
     def cheapest(self) -> OperatorRecord | None:
         return self.front[0] if self.front else None
+
+
+def frontier_sizes(store: OperatorStore) -> dict[str, tuple[int, int]]:
+    """Per-signature ``{dirname: (record_count, frontier_size)}``.
+
+    The fleet's densification report diffs two of these snapshots (before
+    and after a sweep) to show what the run actually bought.
+    """
+    out: dict[str, tuple[int, int]] = {}
+    for sig in store.signatures():
+        recs = store.records(sig)
+        out[sig.dirname] = (len(recs), len(ParetoFrontier(recs)))
+    return out

@@ -26,6 +26,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import tempfile
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable
@@ -34,6 +35,7 @@ import numpy as np
 
 from ..core.arith import benchmark
 from ..core.circuits import Circuit, Gate, Op
+from ..core.miter import measure_error
 from ..core.templates import TemplateParams
 
 __all__ = [
@@ -41,11 +43,32 @@ __all__ = [
     "OperatorSignature",
     "OperatorRecord",
     "OperatorStore",
+    "atomic_write_json",
     "circuit_to_dict",
     "circuit_from_dict",
 ]
 
 FORMAT_VERSION = 1
+
+
+def atomic_write_json(path: Path, doc: dict) -> None:
+    """Serialize ``doc`` to a uniquely named temp file next to ``path`` and
+    ``os.replace`` it into place (atomic on POSIX): concurrent writers —
+    fleet workers sharing one store — never expose torn JSON, and losing a
+    same-destination race just publishes identical bytes twice."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=f".{path.stem}.",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(json.dumps(doc, sort_keys=True, indent=1))
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 OP_KINDS = ("mul", "adder")
 
@@ -162,13 +185,6 @@ class OperatorRecord:
         return hashlib.sha256(blob).hexdigest()[:16]
 
 
-def _measure(circuit: Circuit, exact_values: np.ndarray) -> tuple[int, float]:
-    """Exhaustive (wce, mae) of a candidate against the exact operator."""
-    vals = circuit.eval_words().astype(np.int64)
-    err = np.abs(vals - exact_values.astype(np.int64))
-    return int(err.max()), float(err.mean())
-
-
 # ---------------------------------------------------------------------------
 # the store
 # ---------------------------------------------------------------------------
@@ -186,11 +202,11 @@ class OperatorStore:
 
     # ------------------------------------------------------------------ write
     def put(self, record: OperatorRecord) -> str:
+        """Persist ``record``; idempotent and, via :func:`atomic_write_json`,
+        safe under concurrent fleet writers sharing one store."""
         key = record.content_key()
         record.key = key
-        d = self.root / record.signature.dirname
-        d.mkdir(parents=True, exist_ok=True)
-        path = d / f"{key}.json"
+        path = self.root / record.signature.dirname / f"{key}.json"
         if path.exists():
             return key
         doc = record.payload()
@@ -203,9 +219,7 @@ class OperatorStore:
             meta=record.meta,
             key=key,
         )
-        tmp = path.with_suffix(".tmp")
-        tmp.write_text(json.dumps(doc, sort_keys=True, indent=1))
-        tmp.replace(path)   # atomic publish: readers never see partial JSON
+        atomic_write_json(path, doc)
         return key
 
     def put_circuit(
@@ -224,7 +238,7 @@ class OperatorStore:
         Raises if the candidate violates the signature's error threshold —
         the store only ever holds *sound* operators.
         """
-        wce, mae = _measure(circuit, signature.exact_values())
+        wce, mae = measure_error(circuit, signature.exact_values())
         if wce > signature.threshold:
             raise ValueError(
                 f"unsound operator: measured wce {wce} > threshold "
@@ -240,7 +254,8 @@ class OperatorStore:
 
     def sink(self, signature: OperatorSignature, source: str) -> Callable:
         """A callback for :func:`repro.core.search.progressive_search`'s
-        ``sink=`` parameter: persists every recorded SearchResult."""
+        ``sink=`` parameter: persists every recorded
+        :class:`~repro.core.engine.Candidate` as it is found."""
 
         def _sink(result) -> None:
             self.put_circuit(
@@ -251,7 +266,7 @@ class OperatorStore:
                 proxies=getattr(result, "proxies", {}) or {},
                 params=getattr(result, "params", None),
                 meta={
-                    "grid_point": list(getattr(result, "grid_point", ()) or ()),
+                    **dict(getattr(result, "meta", {}) or {}),
                     "wall_s": getattr(result, "wall_s", None),
                 },
             )
@@ -297,6 +312,13 @@ class OperatorStore:
     def get(self, signature: OperatorSignature, key: str) -> OperatorRecord:
         return self._load(self.root / signature.dirname / f"{key}.json")
 
+    def records(self, signature: OperatorSignature) -> list[OperatorRecord]:
+        """All records stored under one signature, sorted by (area, wce)."""
+        d = self.root / signature.dirname
+        recs = [self._load(p) for p in sorted(d.glob("*.json"))] if d.is_dir() else []
+        recs.sort(key=lambda r: (r.area, r.wce))
+        return recs
+
     def query(
         self,
         op_kind: str | None = None,
@@ -317,8 +339,7 @@ class OperatorStore:
                 continue
             if max_threshold is not None and sig.threshold > max_threshold:
                 continue
-            for path in sorted((self.root / sig.dirname).glob("*.json")):
-                rec = self._load(path)
+            for rec in self.records(sig):
                 if source is None or rec.source == source:
                     recs.append(rec)
         recs.sort(key=lambda r: (r.area, r.wce))

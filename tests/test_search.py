@@ -5,6 +5,7 @@ import pytest
 
 from repro.core.arith import benchmark
 from repro.core.baselines import mecals_like, muscat_like, random_sound
+from repro.core.engine import Candidate, SearchOutcome
 from repro.core.miter import HAVE_Z3, MiterZ3, worst_case_error
 from repro.core.search import progressive_search
 from repro.core.synth import area
@@ -23,9 +24,12 @@ def adder4():
 def test_progressive_shared_beats_exact_area(adder4):
     rep = progressive_search(adder4, et=1, method="shared",
                              wall_budget_s=90, timeout_ms=15_000)
+    assert isinstance(rep, SearchOutcome) and rep.engine == "shared"
+    assert rep.stats["sat_points"] == len(rep.results) > 0
     assert rep.best is not None
     assert rep.best.area < area(adder4)
     for r in rep.results:
+        assert isinstance(r, Candidate)
         assert worst_case_error(adder4, r.circuit) <= 1
 
 
@@ -74,6 +78,7 @@ def test_tensor_search_with_smt_seed(adder4):
     assert seed is not None
     rep = tensor_search(adder4, et=2, pit=6, population=1024,
                         generations=30, seeds=[seed])
+    assert isinstance(rep, SearchOutcome) and rep.engine == "tensor"
     assert rep.best is not None
     assert worst_case_error(adder4, rep.best.circuit) <= 2
     assert rep.best.area <= area(tpl.instantiate(seed))
