@@ -9,6 +9,25 @@
 Runs on CPU in a couple of minutes.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Adaptive serving
+----------------
+The searches above emit a whole *frontier* of operators, not one circuit
+— and the serving runtime (:mod:`repro.serving`) exploits that at
+deployment time.  Fill a library, then serve with the QoS controller
+walking the frontier between batches:
+
+    python -m repro.fleet --library runs/lib --sweep smoke
+    python -m repro.launch.serve --reduced --adaptive --library runs/lib \
+        --schedule ramp --ticks 8 --target-ms-per-step 20 \
+        --drift-budget 0.05 --watch-library --bench-json BENCH_serve.json
+
+The per-layer LUT stack is a plain jitted argument of the decode step, so
+every plan swap (controller move, or a background ``repro.fleet`` sweep
+landing new operators while ``--watch-library`` polls the store) reuses
+the one traced executable — no recompilation mid-serve.  Telemetry
+(tok/s split by prefill/decode, ms/step, swap log) lands in
+``BENCH_serve.json`` / ``--telemetry``.
 """
 
 import numpy as np

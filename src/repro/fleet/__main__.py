@@ -12,10 +12,27 @@ import argparse
 import sys
 import time
 
+from pathlib import Path
+
 from ..library.pareto import frontier_sizes
-from ..library.store import OperatorStore
+from ..library.store import OperatorStore, atomic_write_json
 from .plan import SWEEPS, load_spec, plan_jobs
-from .worker import run_sweep
+from .worker import RECEIPT_DIR, run_sweep
+
+
+def notify_store_update(store: OperatorStore, *, sweep: str,
+                        added: int) -> None:
+    """Store-change notification: stamp ``<library>/_fleet/last_update.json``
+    with the post-sweep :meth:`~repro.library.store.OperatorStore.version_token`.
+    A serving-side :class:`repro.serving.watcher.LibraryWatcher` detects the
+    change through the token itself; the stamp is the human/ops-facing
+    record of *which* sweep moved it and when."""
+    atomic_write_json(Path(store.root) / RECEIPT_DIR / "last_update.json", {
+        "sweep": sweep,
+        "added": added,
+        "version_token": store.version_token(),
+        "finished_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    })
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -63,6 +80,8 @@ def main(argv: list[str] | None = None) -> int:
         nb, fb = before.get(name, (0, 0))
         na, fa = after.get(name, (0, 0))
         print(f"  {name:18s} {nb:6d} -> {na:<6d} {fb:6d} -> {fa:<6d}")
+    if added:
+        notify_store_update(store, sweep=spec.name, added=added)
     n_ok = sum(r.status == "ok" for r in results)
     n_skip = sum(r.status == "skipped" for r in results)
     n_fail = sum(r.status == "failed" for r in results)

@@ -1,50 +1,73 @@
-"""Serving launcher: batched autoregressive decode with KV caches.
+"""Serving launcher: a thin CLI over :mod:`repro.serving`.
 
-CPU-runnable with ``--reduced``; the same serve_step is what the dry-run
+CPU-runnable with ``--reduced``; the same decode step is what the dry-run
 lowers for the decode_32k / long_500k cells on the production mesh.
-Requests are synthetic prompts; decoding is greedy.  Throughput and
-per-token latency are reported at the end.
+Requests are synthetic prompts on a deterministic load profile
+(steady / ramp / spike); decoding is greedy.  Prefill and decode
+throughput are reported *separately* — prefill here is a python-loop over
+the prompt through the decode step, so folding it into one number would
+silently understate decode throughput.
+
+Three serving modes:
+
+* plain                — exact decode, no operator library.
+* ``--library``        — one QoS plan selected at startup (as before).
+* ``--adaptive``       — the plan is a runtime input: a QoS controller
+  walks the operator frontier between batches (latency target vs drift
+  budget), and ``--watch-library`` additionally picks up operators a
+  background ``python -m repro.fleet`` sweep adds mid-serve.  The decode
+  step never retraces across swaps.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from .. import parallel
 from ..configs import ARCH_IDS, get_config
-from ..models import decode_fn, init_caches, init_model
-from ..train.data import DataState, synth_batch
+from ..models import init_model
+from ..serving import (
+    ControllerConfig,
+    LibraryWatcher,
+    PlanLadder,
+    QoSController,
+    ServingEngine,
+    Telemetry,
+    make_profile,
+)
+from ..serving.loadgen import PROFILES
 from .mesh import make_smoke_mesh
 
 
-def _qos_luts(cfg, library: str, budget: float):
-    """Build the per-layer LUT stack from a stored operator frontier.
-
-    Serving has no calibration batch, so sensitivities are uniform and the
-    budget is in summed compiled-table mae16 units (one mid-grade 2-bit
-    operator costs ~30); run ``examples/approx_inference.py --library``
-    for measured per-layer drift budgets."""
-    import numpy as np
-
-    from ..library import load_mul_frontier, select_plan, stack_luts
-    from .analysis import plan_report
+def _frontier(library: str):
+    from ..library import load_mul_frontier
 
     try:
-        compiled, exact_area, _bits = load_mul_frontier(library)
+        return load_mul_frontier(library)
     except LookupError as e:
         raise SystemExit(str(e))
+
+
+def _startup_plan(cfg, compiled, exact_area, budget: float):
+    """The legacy one-shot selection (uniform sensitivities, mae16-unit
+    budget); ``examples/approx_inference.py --library`` measures real
+    per-layer drift budgets."""
+    from ..library import select_plan
+    from .analysis import plan_report
+
     plan = select_plan(compiled, np.ones(cfg.n_layers), budget,
                        exact_area=exact_area)
-    print(f"QoS plan from {library} ({len(compiled)} frontier operator(s)):")
+    print(f"QoS plan ({len(compiled)} frontier operator(s)):")
     print(plan_report(plan))
     if all(c.key is None for c in plan.choices):
         print("note: budget admits no downgrade — every layer stays exact "
               "(serving budgets are mae16 units; try a larger --qos-budget)")
-    return jnp.asarray(stack_luts(plan, compiled))
+    return plan
 
 
 def main() -> None:
@@ -59,56 +82,124 @@ def main() -> None:
                     help="approximate-operator store; routes MLP matmuls "
                          "through QoS-selected per-layer LUT multipliers")
     ap.add_argument("--qos-budget", type=float, default=50.0,
-                    help="QoS budget in summed compiled-table mae16 units "
-                         "(uniform layer sensitivities; measure real "
-                         "per-layer drift with examples/approx_inference.py)")
+                    help="startup QoS budget in summed compiled-table mae16 "
+                         "units (non-adaptive mode only)")
+    # ---- load profile -----------------------------------------------------
+    ap.add_argument("--schedule", choices=PROFILES, default="steady",
+                    help="synthetic load profile shape")
+    ap.add_argument("--ticks", type=int, default=1,
+                    help="load-profile length in arrival ticks")
+    ap.add_argument("--per-tick", type=int, default=None,
+                    help="arrivals per tick (steady) / peak (ramp, spike); "
+                         "default: --batch")
+    # ---- adaptive runtime -------------------------------------------------
+    ap.add_argument("--adaptive", action="store_true",
+                    help="QoS controller walks the operator frontier between "
+                         "batches (requires --library)")
+    ap.add_argument("--target-ms-per-step", type=float, default=50.0,
+                    help="controller latency target (EWMA decode ms/step)")
+    ap.add_argument("--drift-budget", type=float, default=0.05,
+                    help="mean |Δlogit| allowed vs the exact shadow step")
+    ap.add_argument("--shadow-every", type=int, default=4,
+                    help="sample the exact shadow step every N batches")
+    ap.add_argument("--ladder-levels", type=int, default=6,
+                    help="plan-ladder resolution across the frontier")
+    ap.add_argument("--watch-library", action="store_true",
+                    help="poll the store between batches and hot-swap in "
+                         "operators a background fleet sweep adds")
+    ap.add_argument("--poll-s", type=float, default=2.0,
+                    help="minimum seconds between store version polls")
+    # ---- output -----------------------------------------------------------
+    ap.add_argument("--telemetry", default=None,
+                    help="write the full telemetry dump (JSON) here")
+    ap.add_argument("--bench-json", default=None,
+                    help="write the telemetry summary (tok/s, ms/step, swap "
+                         "count) here, e.g. BENCH_serve.json")
     args = ap.parse_args()
 
+    if args.adaptive and not args.library:
+        raise SystemExit("--adaptive requires --library (the frontier to walk)")
+    if args.watch_library and not args.library:
+        raise SystemExit("--watch-library requires --library")
+
     cfg = get_config(args.arch, reduced=args.reduced)
-    luts = None
+    plan = compiled = exact_area = controller = watcher = None
     if args.library:
         if cfg.family == "audio":
             raise SystemExit("--library: LUT routing supports LM families only")
         cfg = cfg.with_approx_mlp()
-        luts = _qos_luts(cfg, args.library, args.qos_budget)
+        compiled, exact_area, bits = _frontier(args.library)
+        print(f"library {args.library}: {len(compiled)} operator(s) on the "
+              f"{bits}-bit multiplier frontier")
+        if args.adaptive:
+            ladder = PlanLadder.build(compiled, cfg.n_layers,
+                                      exact_area=exact_area,
+                                      levels=args.ladder_levels)
+            controller = QoSController(ladder, ControllerConfig(
+                target_ms_per_step=args.target_ms_per_step,
+                drift_budget=args.drift_budget,
+                shadow_every=args.shadow_every,
+            ))
+            plan = ladder.plan(0)   # start exact; the controller walks up
+            print(f"adaptive: {len(ladder)}-level plan ladder, target "
+                  f"{args.target_ms_per_step} ms/step, drift budget "
+                  f"{args.drift_budget}")
+        else:
+            plan = _startup_plan(cfg, compiled, exact_area, args.qos_budget)
+        if args.watch_library:
+            watcher = LibraryWatcher(args.library, min_poll_s=args.poll_s)
+
     mesh = make_smoke_mesh()
     key = jax.random.PRNGKey(args.seed)
+    profile = make_profile(args.schedule, ticks=args.ticks,
+                           per_tick=args.per_tick or args.batch,
+                           prompt_len=args.prompt_len, gen_len=args.gen_len)
 
     with parallel.activate(mesh), mesh:
         params = init_model(cfg, key)
-        total = args.prompt_len + args.gen_len
-        caches = init_caches(cfg, args.batch, total)
-        step = decode_fn(cfg)
+        warmup = None
         if cfg.family == "audio":
             from ..models.encdec import prefill_cross
-            frames = synth_batch(cfg, args.batch, 1, DataState(args.seed, 0))["frames"]
-            caches = prefill_cross(cfg, params, frames, caches)
+            from ..train.data import DataState, synth_batch
 
-        if luts is not None:
-            step_fn = lambda p, c, t, pos: step(cfg, p, c, t, pos, luts=luts)
-        else:  # encdec's decode step has no luts parameter
-            step_fn = lambda p, c, t, pos: step(cfg, p, c, t, pos)
-        jit_step = jax.jit(step_fn, donate_argnums=(1,))
+            frames = synth_batch(cfg, args.batch, 1,
+                                 DataState(args.seed, 0))["frames"]
+            warmup = lambda caches: prefill_cross(cfg, params, frames, caches)
 
-        prompts = synth_batch(cfg, args.batch, args.prompt_len,
-                              DataState(args.seed, 1))["tokens"]
-        # prefill by stepping the prompt (decode-path prefill keeps one code path)
-        tok = prompts[:, :1]
+        engine = ServingEngine(
+            cfg, params, batch=args.batch, prompt_len=args.prompt_len,
+            gen_len=args.gen_len, plan=plan, compiled=compiled,
+            exact_area=exact_area, warmup_caches=warmup,
+        )
         t0 = time.time()
-        for t in range(args.prompt_len):
-            logits, caches = jit_step(params, caches, prompts[:, t:t+1], jnp.int32(t))
-        generated = []
-        for t in range(args.prompt_len, total):
-            tok = jnp.argmax(logits, axis=-1)[:, None]
-            generated.append(tok)
-            logits, caches = jit_step(params, caches, tok, jnp.int32(t))
-        dt = time.time() - t0
-        toks = args.batch * total
-        print(f"arch={cfg.name} batch={args.batch} "
-              f"{toks} tokens in {dt:.2f}s = {toks/dt:.1f} tok/s "
-              f"({dt/total*1e3:.1f} ms/step)")
-        out = jnp.concatenate(generated, axis=1)
-        print("sample:", out[0, :16].tolist())
+        telemetry = engine.serve(profile, controller=controller,
+                                 watcher=watcher, telemetry=Telemetry(),
+                                 seed=args.seed, log=print)
+        wall = time.time() - t0
+
+    s = telemetry.summary()
+    print(f"arch={cfg.name} profile={profile.name} "
+          f"batches={s['batches']} requests={s['requests']} "
+          f"wall={wall:.2f}s")
+    print(f"  decode : {s['decode_tok_s']:.1f} tok/s "
+          f"({s['ms_per_step']:.1f} ms/step)")
+    print(f"  prefill: {s['prefill_tok_s']:.1f} tok/s "
+          f"(python-loop prefill, timed separately from decode)")
+    if engine.last_tokens is not None:
+        print("sample:", engine.last_tokens[0, :16].tolist())
+    if engine.plan is not None:
+        print(f"  plan swaps: {s['swaps']} {s['swaps_by_reason']} — decode "
+              f"step traced {engine.trace_count}x")
+    if args.telemetry:
+        telemetry.dump(args.telemetry)
+        print(f"telemetry -> {args.telemetry}")
+    if args.bench_json:
+        from pathlib import Path
+
+        out = Path(args.bench_json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(s, indent=1, sort_keys=True))
+        print(f"bench summary -> {args.bench_json}")
 
 
 if __name__ == "__main__":

@@ -50,8 +50,11 @@ _LAZY = {
     "LayerPlan": ".qos",
     "measure_layer_costs": ".qos",
     "measure_sensitivities": ".qos",
+    "plan_ladder": ".qos",
+    "refresh_plan": ".qos",
     "select_plan": ".qos",
     "stack_luts": ".qos",
+    "validate_lut_stack": ".qos",
 }
 
 
@@ -79,6 +82,9 @@ __all__ = [
     "clear_compile_cache",
     "LayerPlan",
     "select_plan",
+    "refresh_plan",
+    "plan_ladder",
+    "validate_lut_stack",
     "measure_layer_costs",
     "measure_sensitivities",
     "stack_luts",

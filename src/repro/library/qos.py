@@ -18,8 +18,9 @@ budget-independent sequence, so a tighter budget can never produce a
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Callable, Iterator, Sequence
 
 import numpy as np
 
@@ -30,6 +31,9 @@ __all__ = [
     "LayerChoice",
     "LayerPlan",
     "select_plan",
+    "refresh_plan",
+    "plan_ladder",
+    "validate_lut_stack",
     "measure_layer_costs",
     "measure_sensitivities",
     "stack_luts",
@@ -78,6 +82,80 @@ class LayerPlan:
             out[c.key] = out.get(c.key, 0) + 1
         return out
 
+    @property
+    def plan_id(self) -> str:
+        """Stable short identity of the *assignment* (per-layer operator
+        keys only) — two plans that route every layer identically share an
+        id even if selected under different budgets.  The serving runtime
+        uses it to suppress no-op swaps and label telemetry."""
+        blob = ",".join(c.key or "exact" for c in self.choices)
+        return hashlib.sha256(blob.encode()).hexdigest()[:10]
+
+
+def _cost_matrix(
+    operators: Sequence[tuple[OperatorRecord, CompiledLut]],
+    sensitivities: Sequence[float] | np.ndarray,
+) -> np.ndarray:
+    """Normalize ``sensitivities`` into a per-(layer, operator) cost matrix:
+    either a per-layer vector ``(L,)`` of drift per unit mae16 (the cheap
+    linear model), or an already-measured ``(L, O)`` matrix."""
+    sens = np.asarray(sensitivities, dtype=np.float64)
+    assert (sens >= 0).all(), "drift costs must be non-negative"
+    if sens.ndim == 1:
+        maes = np.array([comp.mae16 for _, comp in operators])
+        return sens[:, None] * maes[None, :]           # (L, O) linear model
+    assert sens.shape == (sens.shape[0], len(operators))
+    return sens
+
+
+def _downgrade_ladders(
+    operators: Sequence[tuple[OperatorRecord, CompiledLut]],
+    costs: np.ndarray,
+    exact_area: float,
+) -> list[list[tuple[str | None, float, float]]]:
+    """Per-layer downgrade ladder: exact first, then cost-ascending operators
+    that strictly save area over the previous rung (dominated rungs and
+    rungs costlier than a cheaper-area option never help)."""
+    ladders: list[list[tuple[str | None, float, float]]] = []
+    for l in range(costs.shape[0]):
+        order = sorted(range(len(operators)),
+                       key=lambda o: (costs[l, o], operators[o][0].area))
+        ladder: list[tuple[str | None, float, float]] = [(None, exact_area, 0.0)]
+        for o in order:
+            rec = operators[o][0]
+            if rec.area < ladder[-1][1]:
+                ladder.append((rec.key, rec.area, float(costs[l, o])))
+        ladders.append(ladder)
+    return ladders
+
+
+def _greedy_steps(
+    ladders: list[list[tuple[str | None, float, float]]],
+) -> Iterator[tuple[int, float]]:
+    """The budget-independent greedy descent: yields ``(layer, d_cost)`` for
+    each single-layer downgrade in best-area-saved-per-drift order.  Every
+    budget's plan is a prefix of this sequence — that shared prefix is both
+    the monotonicity invariant and what lets :func:`plan_ladder` place its
+    levels on actual descent breakpoints."""
+    level = [0] * len(ladders)
+    while True:
+        best = None  # (ratio, layer) — deterministic tie-break on layer id
+        for l, ladder in enumerate(ladders):
+            if level[l] + 1 >= len(ladder):
+                continue
+            _, a_cur, e_cur = ladder[level[l]]
+            _, a_nxt, e_nxt = ladder[level[l] + 1]
+            d_area = a_cur - a_nxt
+            d_cost = e_nxt - e_cur
+            ratio = d_area / d_cost if d_cost > 0 else np.inf
+            if best is None or ratio > best[0]:
+                best = (ratio, l, d_cost)
+        if best is None:
+            return
+        _, l, d_cost = best
+        level[l] += 1
+        yield l, max(0.0, d_cost)
+
 
 def select_plan(
     operators: Sequence[tuple[OperatorRecord, CompiledLut]],
@@ -96,48 +174,13 @@ def select_plan(
     per-operator costs predict far better than the linear model.
     ``budget``: total predicted drift allowed.
     """
-    sens = np.asarray(sensitivities, dtype=np.float64)
-    assert (sens >= 0).all(), "drift costs must be non-negative"
-    n_layers = sens.shape[0]
-    if sens.ndim == 1:
-        maes = np.array([comp.mae16 for _, comp in operators])
-        costs = sens[:, None] * maes[None, :]          # (L, O) linear model
-    else:
-        assert sens.shape == (n_layers, len(operators))
-        costs = sens
-
-    # per-layer downgrade ladder: exact first, then cost-ascending operators
-    # that strictly save area over the previous rung (dominated rungs and
-    # rungs costlier than a cheaper-area option never help).
-    ladders: list[list[tuple[str | None, float, float]]] = []
-    for l in range(n_layers):
-        order = sorted(range(len(operators)),
-                       key=lambda o: (costs[l, o], operators[o][0].area))
-        ladder: list[tuple[str | None, float, float]] = [(None, exact_area, 0.0)]
-        for o in order:
-            rec = operators[o][0]
-            if rec.area < ladder[-1][1]:
-                ladder.append((rec.key, rec.area, float(costs[l, o])))
-        ladders.append(ladder)
+    costs = _cost_matrix(operators, sensitivities)
+    n_layers = costs.shape[0]
+    ladders = _downgrade_ladders(operators, costs, exact_area)
 
     level = [0] * n_layers
     spent = 0.0
-    while True:
-        best = None  # (ratio, layer) — deterministic tie-break on layer id
-        for l in range(n_layers):
-            ladder = ladders[l]
-            if level[l] + 1 >= len(ladder):
-                continue
-            _, a_cur, e_cur = ladder[level[l]]
-            _, a_nxt, e_nxt = ladder[level[l] + 1]
-            d_area = a_cur - a_nxt
-            d_cost = e_nxt - e_cur
-            ratio = d_area / d_cost if d_cost > 0 else np.inf
-            if best is None or ratio > best[0]:
-                best = (ratio, l, d_cost)
-        if best is None:
-            break
-        _, l, d_cost = best
+    for l, d_cost in _greedy_steps(ladders):
         if spent + d_cost > budget:
             break  # first violation stops the pass (monotonicity invariant)
         level[l] += 1
@@ -151,6 +194,79 @@ def select_plan(
         choices=choices, budget=float(budget), predicted_total=float(spent),
         exact_area=float(exact_area),
     )
+
+
+def refresh_plan(
+    plan: LayerPlan,
+    operators: Sequence[tuple[OperatorRecord, CompiledLut]],
+    sensitivities: Sequence[float] | np.ndarray,
+    *,
+    exact_area: float,
+) -> LayerPlan:
+    """Re-select under ``plan``'s original budget against a refreshed
+    frontier — the incremental entry point the serving controller and
+    library watcher call when a background fleet sweep densifies the
+    store mid-serve.  The budget is carried over verbatim, so repeated
+    refreshes keep the area-vs-budget monotonicity of :func:`select_plan`.
+    """
+    return select_plan(operators, sensitivities, plan.budget,
+                       exact_area=exact_area)
+
+
+def plan_ladder(
+    operators: Sequence[tuple[OperatorRecord, CompiledLut]],
+    sensitivities: Sequence[float] | np.ndarray,
+    *,
+    exact_area: float,
+    levels: int = 6,
+) -> list[LayerPlan]:
+    """A monotone ladder of plans walking the area/accuracy frontier.
+
+    Level 0 is the most accurate plan (budget 0 — only free downgrades),
+    the last level is the full greedy descent (every layer on its cheapest
+    rung).  Intermediate levels sit on *actual* breakpoints of the greedy
+    sequence — cumulative-cost quantiles — so every rung change is a real
+    plan change, not an empty budget increment.  Total area is strictly
+    decreasing along the ladder; predicted drift is non-decreasing.
+    """
+    assert levels >= 2, "a ladder spans at least its two endpoints"
+    costs = _cost_matrix(operators, sensitivities)
+    ladders = _downgrade_ladders(operators, costs, exact_area)
+    cum: list[float] = []
+    spent = 0.0
+    for _, d_cost in _greedy_steps(ladders):
+        spent += d_cost
+        cum.append(spent)
+
+    budgets = [0.0]
+    if cum:
+        # descending linspace so the *last* breakpoint (full descent) is in
+        # every ladder, even when levels only leaves one point for it
+        idx = sorted({int(round(i))
+                      for i in np.linspace(len(cum) - 1, 0,
+                                           max(1, levels - 1))})
+        for i in idx:
+            if cum[i] > budgets[-1]:  # zero-cost runs collapse into one level
+                budgets.append(cum[i])
+    return [select_plan(operators, sensitivities, b, exact_area=exact_area)
+            for b in budgets]
+
+
+def validate_lut_stack(prev, new) -> None:
+    """Guard a between-batch hot-swap: the refreshed LUT stack must match
+    the live one in shape and dtype, otherwise the jitted decode step would
+    silently retrace (or worse, mis-broadcast) instead of reusing its
+    compiled executable.  Raises :class:`ValueError` with both signatures.
+    """
+    ps, pd = tuple(prev.shape), prev.dtype
+    ns, nd = tuple(new.shape), new.dtype
+    if ps != ns or pd != nd:
+        raise ValueError(
+            f"refreshed LUT stack is {ns}/{nd} but the serving plan runs "
+            f"{ps}/{pd}; a swap would retrace the decode step — refusing. "
+            f"(Did the refreshed frontier change operator bit width or "
+            f"layer count?)"
+        )
 
 
 def measure_layer_costs(

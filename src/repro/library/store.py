@@ -351,3 +351,19 @@ class OperatorStore:
             for sig in self.signatures()
             for _ in (self.root / sig.dirname).glob("*.json")
         )
+
+    def version_token(self) -> str:
+        """Cheap fingerprint of the store's *readable* contents.
+
+        Records are content-addressed, so the sorted set of relative
+        record paths changes exactly when an operator is added, removed,
+        or merged in — no file needs to be opened.  The serving library
+        watcher polls this between batches to detect a background fleet
+        sweep densifying the store mid-serve; foreign signature dirs the
+        reader would skip anyway do not perturb the token.
+        """
+        h = hashlib.sha256()
+        for sig in self.signatures():
+            for p in sorted((self.root / sig.dirname).glob("*.json")):
+                h.update(f"{sig.dirname}/{p.name}\n".encode())
+        return h.hexdigest()[:16]

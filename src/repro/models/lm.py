@@ -305,9 +305,22 @@ def decode_step(
     ``luts``: optional approximate-multiplier tables routing each layer's
     MLP matmuls (QoS plan); the decode loop is unrolled per layer, so the
     per-layer table is just indexed out.
+
+    ``luts`` must ride through ``jax.jit`` as a *real argument* (a jax
+    array / tracer), never a closed-over host constant: the adaptive
+    serving runtime (:mod:`repro.serving`) hot-swaps plans between batches
+    by passing a different stack to the same traced executable, which only
+    works if tracing never baked the table in.
     """
     win = window_schedule(cfg)
     luts_ = luts if cfg.approx_mlp else None
+    if isinstance(luts_, np.ndarray):
+        # a host numpy table would be traced as a compile-time constant and
+        # every plan swap would silently rebuild the executable
+        raise TypeError(
+            "decode_step luts must be a jax array passed as a jit argument, "
+            "not a numpy constant (serving hot-swap relies on this)"
+        )
     x = params["embed"][tokens].astype(cfg.jnp_dtype)
     x = shard(x, "batch", None, None)
     new_caches: list[Params] = []

@@ -1,0 +1,52 @@
+"""Adaptive serving runtime: the third pillar (search → library → serving).
+
+``repro.launch.serve`` used to freeze one QoS plan at startup; this
+package makes the plan a *runtime input*.  The paper's template search
+yields a whole Pareto frontier of operators, and QoS-Nets-style adaptive
+deployment is where that frontier pays off: a serving fleet trades
+accuracy for throughput under load, between batches, without ever
+recompiling the decode step.
+
+* :mod:`repro.serving.engine` — request queue + batched greedy-decode
+  loop.  The per-layer ``(L, 16, 16)`` LUT stack is a plain jitted
+  argument of the decode step, so a plan swap re-stacks arrays and reuses
+  the one traced executable (``ServingEngine.trace_count`` stays 1).
+* :mod:`repro.serving.controller` — QoS controller: EWMA latency versus
+  a target band plus measured logit drift versus an exact shadow step,
+  walking a :class:`~repro.serving.controller.PlanLadder` up (cheaper)
+  under load and down (more exact) when drift headroom shrinks, with
+  patience/cooldown hysteresis so it never flaps.
+* :mod:`repro.serving.watcher` — store watcher: detects
+  ``OperatorStore.version_token`` changes (a background ``repro.fleet``
+  sweep densifying the library mid-serve) and refreshes the frontier
+  atomically via ``ParetoFrontier.from_store`` → ``qos.refresh_plan`` →
+  ``stack_luts``.
+* :mod:`repro.serving.telemetry` — ring-buffer metrics (tok/s split by
+  prefill/decode, ms/step, active plan, swap events) dumped as one JSON
+  document for the bench trajectory (``BENCH_serve.json``).
+* :mod:`repro.serving.loadgen` — deterministic synthetic request
+  schedules (steady / ramp / spike) so the whole loop is testable on CPU
+  with ``--reduced``.
+"""
+
+from .controller import ControllerConfig, PlanLadder, QoSController
+from .engine import BatchStats, ServingEngine
+from .loadgen import LoadProfile, Request, make_profile, ramp, spike, steady
+from .telemetry import Telemetry
+from .watcher import LibraryWatcher
+
+__all__ = [
+    "BatchStats",
+    "ControllerConfig",
+    "LibraryWatcher",
+    "LoadProfile",
+    "PlanLadder",
+    "QoSController",
+    "Request",
+    "ServingEngine",
+    "Telemetry",
+    "make_profile",
+    "ramp",
+    "spike",
+    "steady",
+]

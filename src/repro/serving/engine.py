@@ -1,0 +1,353 @@
+"""Adaptive serving engine: request queue + batched greedy decode with
+between-batch operator hot-swap.
+
+The load-bearing design point: the per-layer ``(L, 16, 16)`` LUT stack is
+a *plain jitted argument* of the decode step, never a closed-over
+constant.  Swapping QoS plans between batches therefore re-stacks a tiny
+int32 array and changes nothing the compiler specialized on — the decode
+step is traced exactly once for the whole serve, across every controller
+move and library refresh (``trace_count`` pins this, and the end-to-end
+test asserts it).
+
+One ``run_batch`` call serves up to ``batch`` queued requests: prefill
+walks the prompt through the *same* jitted decode step (one code path,
+one trace), then greedy decode extends ``gen_len`` tokens.  Prefill and
+decode are timed separately — a python-loop prefill is O(prompt) step
+dispatches and would otherwise silently poison the decode throughput
+number.  Between batches the engine consults the library watcher (store
+changed? refresh the frontier) and the QoS controller (latency/drift
+says move? swap the plan), both of which funnel through
+:meth:`ServingEngine.swap_plan` and its shape/dtype validation.
+
+Drift sampling: every ``shadow_every`` batches the final decode step is
+also evaluated on copies of the caches with the *exact* LUT stack; the
+mean |Δlogit| between the live and shadow step is the measured drift the
+controller holds under its budget.  The shadow call reuses the one jitted
+executable (same shapes, different table values).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..library.qos import LayerPlan, refresh_plan, stack_luts, validate_lut_stack
+from ..models import decode_fn, init_caches
+from .loadgen import LoadProfile, Request, synth_requests
+from .telemetry import Telemetry
+
+__all__ = ["BatchStats", "ServingEngine"]
+
+
+@dataclass
+class BatchStats:
+    """Measurements of one served batch."""
+
+    n_requests: int
+    prefill_s: float
+    decode_s: float
+    prefill_tokens: int
+    decode_tokens: int
+    decode_steps: int
+    drift: float | None = None
+
+    @property
+    def ms_per_step(self) -> float:
+        return 1e3 * self.decode_s / max(1, self.decode_steps)
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+    @property
+    def prefill_tok_s(self) -> float:
+        return self.prefill_tokens / self.prefill_s if self.prefill_s else 0.0
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        batch: int,
+        prompt_len: int,
+        gen_len: int,
+        plan: LayerPlan | None = None,
+        compiled=None,
+        exact_area: float | None = None,
+        sensitivities=None,
+        warmup_caches: Callable | None = None,
+    ) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.batch = int(batch)
+        self.prompt_len = int(prompt_len)
+        self.gen_len = int(gen_len)
+        self.total = self.prompt_len + self.gen_len
+        self._warmup = warmup_caches
+        self._trace_count = 0
+        self.last_tokens: np.ndarray | None = None   # (n_requests, gen_len)
+
+        self._adaptive = plan is not None
+        self._plan = plan
+        self._compiled = list(compiled) if compiled is not None else []
+        self._exact_area = exact_area
+        self._sens = (np.ones(cfg.n_layers) if sensitivities is None
+                      else np.asarray(sensitivities, dtype=np.float64))
+
+        step = decode_fn(cfg)
+        if self._adaptive:
+            assert cfg.approx_mlp, (
+                "adaptive serving routes MLP matmuls through LUTs; build the "
+                "config with .with_approx_mlp()"
+            )
+            self._luts = jnp.asarray(stack_luts(plan, self._compiled))
+            from ..library.compile import exact_lut16
+
+            self._exact_luts = jnp.asarray(np.broadcast_to(
+                exact_lut16("mul").astype(np.int32),
+                (cfg.n_layers, 16, 16)).copy())
+
+            def step_fn(params, caches, tok, pos, luts):
+                # python side effect runs once per *trace*, so this counts
+                # compilations, not calls — the no-retrace-across-swaps
+                # invariant is `trace_count == 1` after any number of swaps
+                self._trace_count += 1
+                return step(cfg, params, caches, tok, pos, luts=luts)
+        else:
+            self._luts = None
+            self._exact_luts = None
+
+            def step_fn(params, caches, tok, pos):
+                self._trace_count += 1
+                return step(cfg, params, caches, tok, pos)
+
+        self._jit_step = jax.jit(step_fn, donate_argnums=(1,))
+
+    # ----------------------------------------------------------------- state
+    @property
+    def trace_count(self) -> int:
+        """How many times the decode step has been traced (must stay 1)."""
+        return self._trace_count
+
+    @property
+    def plan(self) -> LayerPlan | None:
+        return self._plan
+
+    def _step(self, caches, tok, pos, luts=None):
+        if self._adaptive:
+            return self._jit_step(self.params, caches, tok, pos,
+                                  self._luts if luts is None else luts)
+        return self._jit_step(self.params, caches, tok, pos)
+
+    # ------------------------------------------------------------------ swap
+    def swap_plan(self, plan: LayerPlan, stack, *, reason: str = "manual",
+                  telemetry: Telemetry | None = None,
+                  batch_idx: int = 0) -> bool:
+        """Adopt a new plan between batches.  Validates the stack against
+        the live one (shape/dtype — a mismatch would retrace), suppresses
+        no-op swaps (same per-layer assignment), logs the swap.  Returns
+        whether the plan actually changed."""
+        assert self._adaptive, "engine was built without a QoS plan"
+        if plan.plan_id == self._plan.plan_id:
+            return False
+        new = jnp.asarray(stack)
+        validate_lut_stack(self._luts, new)
+        old_id = self._plan.plan_id
+        self._plan, self._luts = plan, new
+        if telemetry is not None:
+            telemetry.register_plan(plan)
+            telemetry.record_swap(batch=batch_idx, reason=reason,
+                                  old=old_id, new=plan.plan_id)
+        return True
+
+    def refresh_library(self, compiled, exact_area: float, *,
+                        controller=None, reason: str = "library",
+                        telemetry: Telemetry | None = None,
+                        batch_idx: int = 0) -> bool:
+        """Adopt a refreshed frontier (the watcher path).  With a
+        controller, its ladder is rebuilt and its current level re-stacked;
+        without one, the live plan's budget re-selects over the new
+        frontier via :func:`repro.library.qos.refresh_plan`.
+
+        Nothing — engine frontier, controller ladder — is mutated until the
+        new stack passes :func:`~repro.library.qos.validate_lut_stack`
+        inside :meth:`swap_plan`: a surprising store merge (e.g. a future
+        8-bit frontier landing in a watched 4-bit store) raises and leaves
+        the runtime serving consistently on the old plan."""
+        if controller is not None:
+            new_ladder = controller.ladder.refresh(compiled, exact_area)
+            level = min(controller.level, len(new_ladder) - 1)
+            plan, stack = new_ladder.plan(level), new_ladder.luts(level)
+        else:
+            new_ladder = level = None
+            plan = refresh_plan(self._plan, compiled, self._sens,
+                                exact_area=exact_area)
+            stack = stack_luts(plan, compiled)
+        changed = self.swap_plan(plan, stack, reason=reason,
+                                 telemetry=telemetry, batch_idx=batch_idx)
+        self._compiled = list(compiled)
+        self._exact_area = exact_area
+        if controller is not None:
+            controller.adopt(new_ladder, level=level)
+        return changed
+
+    # ----------------------------------------------------------------- batch
+    def run_batch(self, requests: list[Request], *,
+                  shadow: bool = False) -> BatchStats:
+        """Serve one batch: prefill the prompts, greedily decode
+        ``gen_len`` tokens.  Short batches are zero-padded to the fixed
+        batch size so every call reuses the single traced executable."""
+        assert 0 < len(requests) <= self.batch
+        prompts_np = np.zeros((self.batch, self.prompt_len), np.int32)
+        for i, r in enumerate(requests):
+            prompts_np[i] = r.tokens
+        prompts = jnp.asarray(prompts_np)
+
+        caches = init_caches(self.cfg, self.batch, self.total)
+        if self._warmup is not None:
+            caches = self._warmup(caches)
+
+        t0 = time.perf_counter()
+        logits = None
+        for t in range(self.prompt_len):
+            logits, caches = self._step(caches, prompts[:, t:t + 1],
+                                        jnp.int32(t))
+        logits.block_until_ready()
+        t1 = time.perf_counter()
+
+        shadow_logits = None
+        shadow_s = 0.0
+        generated = []
+        for t in range(self.prompt_len, self.total):
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            generated.append(tok)
+            if shadow and self._adaptive and t == self.total - 1:
+                # exact shadow step on copies — the live call below donates
+                # the real caches, the copies are consumed by the shadow.
+                # Timed separately and excluded from decode_s: the shadow is
+                # measurement overhead, and folding it into ms/step would
+                # bias the very latency signal the controller acts on.
+                ts = time.perf_counter()
+                shadow_caches = jax.tree.map(jnp.copy, caches)
+                shadow_logits, _ = self._jit_step(
+                    self.params, shadow_caches, tok, jnp.int32(t),
+                    self._exact_luts)
+                shadow_logits.block_until_ready()
+                shadow_s = time.perf_counter() - ts
+            logits, caches = self._step(caches, tok, jnp.int32(t))
+        logits.block_until_ready()
+        t2 = time.perf_counter()
+
+        n = len(requests)
+        drift = None
+        if shadow_logits is not None:
+            # only the real rows: zero-padded requests decode garbage and
+            # would contaminate the controller's drift signal on the
+            # partial batches ramp/spike load produces routinely
+            drift = float(jnp.abs(logits[:n] - shadow_logits[:n]).mean())
+        # completions for the real (unpadded) requests — a degenerate
+        # repeated-token sample is also the quickest eyeball check that an
+        # aggressive plan's LUT routing is live in decode
+        self.last_tokens = np.asarray(jnp.concatenate(generated, axis=1))[:n]
+        return BatchStats(
+            n_requests=n,
+            prefill_s=t1 - t0,
+            decode_s=t2 - t1 - shadow_s,
+            prefill_tokens=n * self.prompt_len,
+            decode_tokens=n * self.gen_len,
+            decode_steps=self.gen_len,
+            drift=drift,
+        )
+
+    # ----------------------------------------------------------------- serve
+    def serve(
+        self,
+        profile: LoadProfile,
+        *,
+        controller=None,
+        watcher=None,
+        telemetry: Telemetry | None = None,
+        seed: int = 0,
+        on_batch_end: Callable[["ServingEngine", int], None] | None = None,
+        log: Callable[[str], None] | None = None,
+    ) -> Telemetry:
+        """Run the full serving loop over a synthetic load profile.
+
+        Each tick's arrivals join the queue; the queue drains in batches
+        of up to ``batch`` requests.  After every batch the control plane
+        runs: watcher poll (library refresh), controller observe (plan
+        move), then the optional ``on_batch_end`` hook (tests use it to
+        mutate the store mid-serve)."""
+        assert profile.prompt_len == self.prompt_len
+        assert profile.gen_len == self.gen_len
+        telemetry = telemetry or Telemetry()
+        if self._adaptive:
+            telemetry.register_plan(self._plan)
+        per_tick = synth_requests(profile, self.cfg.vocab_size, seed)
+        queue: deque[Request] = deque()
+        batch_idx = 0
+        for tick in range(profile.n_ticks):
+            queue.extend(per_tick[tick])
+            while queue:
+                reqs = [queue.popleft()
+                        for _ in range(min(self.batch, len(queue)))]
+                backlog = len(queue)   # requests still waiting behind this batch
+                want_shadow = (controller is not None and self._adaptive
+                               and controller.wants_shadow(batch_idx))
+                stats = self.run_batch(reqs, shadow=want_shadow)
+                telemetry.record_batch(
+                    batch=batch_idx, tick=tick, n_requests=stats.n_requests,
+                    prefill_s=stats.prefill_s, decode_s=stats.decode_s,
+                    prefill_tokens=stats.prefill_tokens,
+                    decode_tokens=stats.decode_tokens,
+                    decode_steps=stats.decode_steps,
+                    plan_id=self._plan.plan_id if self._adaptive else None,
+                    drift=stats.drift, backlog=backlog,
+                )
+
+                # ---- between-batch control plane ------------------------
+                if watcher is not None and self._adaptive and watcher.poll():
+                    try:
+                        compiled, exact_area, _bits = watcher.load_frontier()
+                        # LookupError: store emptied; ValueError: refreshed
+                        # stack would retrace (validate_lut_stack refused).
+                        # Either way the server keeps running on the old,
+                        # still-consistent plan.
+                        if self.refresh_library(
+                                compiled, exact_area, controller=controller,
+                                telemetry=telemetry, batch_idx=batch_idx
+                        ) and log:
+                            log(f"batch {batch_idx}: library refresh -> "
+                                f"plan {self._plan.plan_id}")
+                    except (LookupError, ValueError) as e:
+                        if log:
+                            log(f"watcher: refresh skipped ({e})")
+                if controller is not None and self._adaptive:
+                    # the load signal is *effective* ms/step: service time
+                    # scaled by outstanding work (Little's-law flavour) —
+                    # raw step latency is nearly plan-independent, so a
+                    # building queue, not the step clock, is what says
+                    # "trade accuracy for throughput" under ramp/spike load
+                    eff_ms = stats.ms_per_step * (1.0 + backlog / self.batch)
+                    level = controller.observe(eff_ms, stats.drift)
+                    if level is not None:
+                        moved = self.swap_plan(
+                            controller.plan, controller.luts(),
+                            reason=f"qos-{controller.last_reason}",
+                            telemetry=telemetry, batch_idx=batch_idx)
+                        if moved and log:
+                            log(f"batch {batch_idx}: controller -> level "
+                                f"{level} ({controller.last_reason}), plan "
+                                f"{self._plan.plan_id}")
+                if on_batch_end is not None:
+                    on_batch_end(self, batch_idx)
+                batch_idx += 1
+        return telemetry

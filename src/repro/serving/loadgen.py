@@ -1,0 +1,113 @@
+"""Deterministic synthetic load profiles for the serving runtime.
+
+A :class:`LoadProfile` is a per-tick arrival count plus fixed request
+shapes (prompt/gen lengths stay constant so the jitted decode step is
+traced exactly once).  Profiles are pure data — the same ``(profile,
+seed)`` pair synthesizes bit-identical request streams on any machine,
+which is what makes the controller's end-to-end behaviour testable on
+CPU with ``--reduced``.
+
+Three canonical shapes cover the QoS controller's operating regimes:
+
+* ``steady`` — constant arrivals; the controller should settle, not flap.
+* ``ramp``   — linearly growing arrivals; the controller walks the
+  frontier *up* (cheaper operators) as the queue builds.
+* ``spike``  — baseline with a burst window; tests recovery hysteresis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["Request", "LoadProfile", "steady", "ramp", "spike",
+           "make_profile", "synth_requests", "PROFILES"]
+
+
+@dataclass(frozen=True)
+class Request:
+    """One synthetic serving request: a prompt to greedily extend."""
+
+    rid: int
+    tokens: np.ndarray      # (prompt_len,) int32 prompt
+    arrived_tick: int = 0
+
+
+@dataclass(frozen=True)
+class LoadProfile:
+    """Arrivals per tick plus the (fixed) request geometry."""
+
+    name: str
+    arrivals: tuple[int, ...]
+    prompt_len: int = 16
+    gen_len: int = 32
+
+    @property
+    def n_ticks(self) -> int:
+        return len(self.arrivals)
+
+    @property
+    def total_requests(self) -> int:
+        return int(sum(self.arrivals))
+
+
+def steady(ticks: int, per_tick: int, *, prompt_len: int = 16,
+           gen_len: int = 32) -> LoadProfile:
+    return LoadProfile("steady", (per_tick,) * ticks, prompt_len, gen_len)
+
+
+def ramp(ticks: int, peak: int, *, prompt_len: int = 16,
+         gen_len: int = 32) -> LoadProfile:
+    """0 -> ``peak`` arrivals, linearly over ``ticks`` ticks."""
+    arr = tuple(int(round(peak * (t + 1) / ticks)) for t in range(ticks))
+    return LoadProfile("ramp", arr, prompt_len, gen_len)
+
+
+def spike(ticks: int, base: int, peak: int, *, at: int | None = None,
+          width: int | None = None, prompt_len: int = 16,
+          gen_len: int = 32) -> LoadProfile:
+    """``base`` arrivals with a ``peak`` burst of ``width`` ticks at ``at``."""
+    at = ticks // 3 if at is None else at
+    width = max(1, ticks // 4) if width is None else width
+    arr = tuple(peak if at <= t < at + width else base for t in range(ticks))
+    return LoadProfile("spike", arr, prompt_len, gen_len)
+
+
+PROFILES = ("steady", "ramp", "spike")
+
+
+def make_profile(kind: str, *, ticks: int, per_tick: int,
+                 prompt_len: int = 16, gen_len: int = 32) -> LoadProfile:
+    """CLI helper: one of :data:`PROFILES` at a given scale.  ``per_tick``
+    is the steady rate / ramp peak / spike peak (spike base is 1)."""
+    if kind == "steady":
+        return steady(ticks, per_tick, prompt_len=prompt_len, gen_len=gen_len)
+    if kind == "ramp":
+        return ramp(ticks, per_tick, prompt_len=prompt_len, gen_len=gen_len)
+    if kind == "spike":
+        return spike(ticks, 1, per_tick, prompt_len=prompt_len,
+                     gen_len=gen_len)
+    raise ValueError(f"unknown load profile {kind!r}; known: {PROFILES}")
+
+
+def synth_requests(profile: LoadProfile, vocab_size: int,
+                   seed: int = 0) -> list[list[Request]]:
+    """Materialize the request stream: ``out[tick]`` is that tick's
+    arrivals.  Prompts follow the same Zipf-ish token distribution as
+    :func:`repro.train.data.synth_batch`; the RNG is seeded per
+    ``(seed, tick)`` and drawn sequentially within the tick, so the same
+    profile + seed reproduces the stream bit-identically (changing a
+    tick's arrival count reshuffles only that tick's later prompts)."""
+    out: list[list[Request]] = []
+    rid = 0
+    for tick, n in enumerate(profile.arrivals):
+        rng = np.random.default_rng((seed, tick))
+        reqs = []
+        for _ in range(n):
+            ranks = rng.zipf(1.2, size=profile.prompt_len).astype(np.int64)
+            tokens = np.minimum(ranks - 1, vocab_size - 1).astype(np.int32)
+            reqs.append(Request(rid=rid, tokens=tokens, arrived_tick=tick))
+            rid += 1
+        out.append(reqs)
+    return out

@@ -1,0 +1,130 @@
+"""Ring-buffer serving telemetry: per-batch metrics, plan table, swaps.
+
+The engine appends one event per served batch (tok/s split into prefill
+and decode, ms/step, active plan id, measured shadow drift when sampled)
+into a bounded ring — a long-running server never grows the log without
+bound — while the *plan table* (plan id -> per-layer operator keys) and
+the *swap log* are tiny and kept whole.  ``dump()`` writes everything as
+one JSON document; ``summary()`` is the aggregate the bench trajectory
+ingests (``BENCH_serve.json``).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from pathlib import Path
+
+__all__ = ["Telemetry"]
+
+
+class Telemetry:
+    def __init__(self, capacity: int = 4096) -> None:
+        self.capacity = int(capacity)
+        self.events: deque[dict] = deque(maxlen=self.capacity)
+        self.plans: dict[str, dict] = {}
+        self.swaps: list[dict] = []
+        self.n_batches = 0
+        self.n_requests = 0
+        # whole-run accumulators: the ring may wrap on long serves, but the
+        # summary's rates must cover the same window as its counters
+        self._prefill_s = 0.0
+        self._decode_s = 0.0
+        self._prefill_tokens = 0
+        self._decode_tokens = 0
+        self._decode_steps = 0
+        self._t0 = time.time()
+
+    # ------------------------------------------------------------------ write
+    def register_plan(self, plan) -> str:
+        """Record a :class:`~repro.library.qos.LayerPlan`'s identity once;
+        batch events reference the short ``plan_id``."""
+        pid = plan.plan_id
+        if pid not in self.plans:
+            self.plans[pid] = {
+                "layers": [c.key or "exact" for c in plan.choices],
+                "total_area": plan.total_area,
+                "area_saving": plan.area_saving,
+                "predicted_drift": plan.predicted_total,
+                "budget": plan.budget,
+            }
+        return pid
+
+    def record_batch(self, *, batch: int, tick: int, n_requests: int,
+                     prefill_s: float, decode_s: float, prefill_tokens: int,
+                     decode_tokens: int, decode_steps: int,
+                     plan_id: str | None, drift: float | None = None,
+                     backlog: int = 0) -> None:
+        self.n_batches += 1
+        self.n_requests += n_requests
+        self._prefill_s += prefill_s
+        self._decode_s += decode_s
+        self._prefill_tokens += prefill_tokens
+        self._decode_tokens += decode_tokens
+        self._decode_steps += decode_steps
+        self.events.append({
+            "batch": batch,
+            "tick": tick,
+            "n_requests": n_requests,
+            "prefill_s": round(prefill_s, 6),
+            "decode_s": round(decode_s, 6),
+            "prefill_tokens": prefill_tokens,
+            "decode_tokens": decode_tokens,
+            "prefill_tok_s": round(prefill_tokens / prefill_s, 2)
+            if prefill_s > 0 else None,
+            "decode_tok_s": round(decode_tokens / decode_s, 2)
+            if decode_s > 0 else None,
+            "ms_per_step": round(1e3 * decode_s / max(1, decode_steps), 3),
+            "plan": plan_id,
+            "drift": None if drift is None else round(float(drift), 6),
+            "backlog": backlog,
+        })
+
+    def record_swap(self, *, batch: int, reason: str, old: str | None,
+                    new: str | None) -> None:
+        self.swaps.append({"batch": batch, "reason": reason,
+                           "from": old, "to": new})
+
+    # ------------------------------------------------------------------- read
+    @property
+    def swap_count(self) -> int:
+        return len(self.swaps)
+
+    def summary(self) -> dict:
+        """The aggregates the CI bench row wants: throughput, latency,
+        swap activity.  Rates come from whole-run accumulators, not the
+        ring, so they stay consistent with ``batches``/``requests`` even
+        after the ring wraps on long serves."""
+        reasons: dict[str, int] = {}
+        for s in self.swaps:
+            reasons[s["reason"]] = reasons.get(s["reason"], 0) + 1
+        return {
+            "batches": self.n_batches,
+            "requests": self.n_requests,
+            "wall_s": round(time.time() - self._t0, 3),
+            "decode_tok_s": round(self._decode_tokens / self._decode_s, 2)
+            if self._decode_s else 0.0,
+            "prefill_tok_s": round(self._prefill_tokens / self._prefill_s, 2)
+            if self._prefill_s else 0.0,
+            "ms_per_step": round(1e3 * self._decode_s /
+                                 self._decode_steps, 3)
+            if self._decode_steps else 0.0,
+            "swaps": self.swap_count,
+            "swaps_by_reason": reasons,
+            "plans_used": len(self.plans),
+        }
+
+    def dump(self, path: str | Path) -> dict:
+        """Write the full telemetry document (summary + plan table + swap
+        log + ring events) as JSON and return it."""
+        doc = {
+            "summary": self.summary(),
+            "plans": self.plans,
+            "swaps": self.swaps,
+            "events": list(self.events),
+        }
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(doc, indent=1, sort_keys=True))
+        return doc

@@ -1,0 +1,64 @@
+"""Library watcher: pick up store changes without stopping the server.
+
+A background ``python -m repro.fleet`` sweep densifies the operator store
+*while* the server decodes.  Between batches the engine polls the
+watcher; when the store's :meth:`~repro.library.store.OperatorStore.version_token`
+changes (records are content-addressed, so any put/merge/removal changes
+the token), the watcher reloads the Pareto frontier and the runtime
+atomically refreshes its plan — ``ParetoFrontier.from_store`` →
+``qos.select_plan``/``refresh_plan`` → ``stack_luts`` — with shape/dtype
+validation so a surprising store merge (different bit width) refuses to
+swap instead of retracing the decode step.
+
+Polling is rate-limited (``min_poll_s``) because a version check lists
+the store directory; between-batch cadence on a busy server would stat
+the filesystem far more often than libraries actually change.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from ..library.store import OperatorStore
+
+__all__ = ["LibraryWatcher"]
+
+
+class LibraryWatcher:
+    def __init__(self, library, *, min_poll_s: float = 2.0,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        self.library = library
+        self.store = OperatorStore(library)
+        self.min_poll_s = float(min_poll_s)
+        self._clock = clock
+        self._token = self.store.version_token()
+        self._last_poll = clock()
+        self.refreshes = 0
+
+    @property
+    def token(self) -> str:
+        return self._token
+
+    def poll(self) -> bool:
+        """True when the store's contents changed since the last poll.
+        Cheap no-op while the rate limit holds."""
+        now = self._clock()
+        if self.min_poll_s > 0 and now - self._last_poll < self.min_poll_s:
+            return False
+        self._last_poll = now
+        token = self.store.version_token()
+        if token == self._token:
+            return False
+        self._token = token
+        return True
+
+    def load_frontier(self):
+        """(compiled frontier, exact_area, bits) of the refreshed store —
+        the triple every plan-refresh path consumes.  Raises
+        :class:`LookupError` if the store lost its multipliers (the caller
+        keeps serving on the old plan)."""
+        from ..library.compile import load_mul_frontier
+
+        self.refreshes += 1
+        return load_mul_frontier(self.library)
