@@ -1,10 +1,21 @@
 """Kernel micro-benchmarks (CPU timings of the jnp reference path; the
 Pallas kernels themselves are TPU-targeted and validated in interpret
-mode, so what we time here is the semantic workload)."""
+mode, so what we time here is the semantic workload).
+
+``--json BENCH_kernels.json`` additionally dumps the rows as structured
+JSON — the bench trajectory CI tracks alongside ``BENCH_serve.json``.
+The LUT-matmul rows are decode-step shaped (M tokens through a K x N
+projection) and report tokens/s and ms/step at both serving widths, so
+the 4-bit-vs-8-bit cost of routing a model through searched operators is
+one diff away.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +60,23 @@ def main(rows: list | None = None) -> list[tuple[str, float, str]]:
     gflops = 2 * M * K * N / (us / 1e6) / 1e9
     out.append((f"approx_matmul_{M}", us, f"{gflops:.2f} eq-GFLOP/s"))
 
+    # width comparison: a decode-step-shaped LUT matmul (M tokens through
+    # one K x N projection) at W4A4 vs composed W8A8 tables
+    from repro.precision import compose, exact_table
+
+    Mt, Kd, Nd = 64, 256, 256
+    lut8 = jnp.asarray(
+        compose.tile_to_width(exact_table("mul", 4)).astype(np.int32))
+    for bits, table in ((4, lut), (8, lut8)):
+        side = table.shape[-1]
+        aw = jnp.asarray(rng.integers(0, side, (Mt, Kd)), dtype=jnp.int32)
+        bw = jnp.asarray(rng.integers(0, side, (Kd, Nd)), dtype=jnp.int32)
+        f = jax.jit(lambda x, y, t=table: ops.approx_matmul(
+            x, y, t, backend="ref"))
+        us = _time(f, aw, bw)
+        out.append((f"lut_matmul_w{bits}_tok{Mt}", us,
+                    f"{Mt / (us / 1e6):.0f} tok/s, {us / 1e3:.3f} ms/step"))
+
     # flash_attention reference path
     q = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)), dtype=jnp.bfloat16)
     k = jnp.asarray(rng.standard_normal((1, 2, 1024, 64)), dtype=jnp.bfloat16)
@@ -62,6 +90,32 @@ def main(rows: list | None = None) -> list[tuple[str, float, str]]:
     return out
 
 
+def rows_to_json(rows: list[tuple[str, float, str]]) -> dict:
+    """Structured view of the bench rows: microseconds plus the derived
+    per-step numbers for the LUT-matmul width rows."""
+    doc: dict = {}
+    for name, us, note in rows:
+        entry: dict = {"us": round(us, 3), "note": note}
+        if name.startswith("lut_matmul_w"):
+            toks = int(name.rsplit("tok", 1)[1])
+            entry["ms_per_step"] = round(us / 1e3, 4)
+            entry["tokens_per_s"] = round(toks / (us / 1e6), 1)
+            entry["width_bits"] = int(name.split("_w")[1].split("_")[0])
+        doc[name] = entry
+    return doc
+
+
 if __name__ == "__main__":
-    for r in main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write the rows as JSON, e.g. BENCH_kernels.json")
+    args = ap.parse_args()
+    rows = main()
+    for r in rows:
         print(r)
+    if args.json:
+        path = Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(rows_to_json(rows), indent=1,
+                                   sort_keys=True))
+        print(f"bench rows -> {path}")

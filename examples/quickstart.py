@@ -28,6 +28,28 @@ landing new operators while ``--watch-library`` polls the store) reuses
 the one traced executable — no recompilation mid-serve.  Telemetry
 (tok/s split by prefill/decode, ms/step, swap log) lands in
 ``BENCH_serve.json`` / ``--telemetry``.
+
+W8A8 serving
+------------
+The searches stop at 4-bit blocks, but serving does not: ``--width 8``
+composes the same searched blocks into 256x256 product tables
+(:mod:`repro.precision` — shift-add of 16x16 tiles over operand nibbles,
+exactness identities checked at build time) and routes decode matmuls
+through a ``(L, 256, 256)`` per-layer stack — the dominant edge
+quantization regime, on searched operators:
+
+    python -m repro.fleet --library runs/lib --sweep 8bit
+    python -m repro.launch.serve --reduced --library runs/lib --width 8 \
+        --qos-budget 1e9 --bench-json BENCH_w8a8.json
+
+The ``8bit`` sweep densifies both block widths (2-bit via the template
+engines, 4-bit via the rewrite baselines); the QoS planner prices each
+block by its *composed* area and error, so the 8-bit frontier is a real
+area/accuracy trade at serving width.  On TPU the 8-bit tables run
+through a two-level Pallas kernel — four 16x16-tile LUT matmuls combined
+by shift-add on the MXU — that bit-matches the gather oracle; everything
+(adaptive controller, library watcher, hot-swap-without-retrace) works at
+either width, one width per serve.
 """
 
 import numpy as np

@@ -41,7 +41,8 @@ import numpy as np
 
 from .arith import benchmark as _benchmark
 from .circuits import Circuit
-from .miter import HAVE_Z3, measure_error, values_from_tables
+from .miter import ERROR_METRICS, HAVE_Z3, ErrorStats, measure_error, \
+    values_from_tables
 from .synth import area, synthesize
 from .templates import IGNORE, SharedTemplate, TemplateParams
 
@@ -187,30 +188,38 @@ class SearchEngine(Protocol):
 # ---------------------------------------------------------------------------
 # the shared harvest: instantiate -> synthesize -> exhaustive re-verify
 # ---------------------------------------------------------------------------
-def verify_circuit(circuit: Circuit, exact_values: np.ndarray, et: int,
-                   *, context: str = "") -> int:
-    """Exhaustive worst-case error of ``circuit`` vs the exact values;
-    raises :class:`UnsoundResultError` when it exceeds ``et``."""
-    wce, _ = measure_error(circuit, exact_values)
-    if wce > et:
+def verify_circuit(circuit: Circuit, exact_values: np.ndarray, et: float,
+                   *, metric: str = "wce", context: str = "") -> float:
+    """Exhaustive error of ``circuit`` vs the exact values under the
+    chosen metric (``wce`` / ``mae`` / ``mse``); raises
+    :class:`UnsoundResultError` when it exceeds ``et``."""
+    val = measure_error(circuit, exact_values).value(metric)
+    if val > et:
         raise UnsoundResultError(
             f"search result failed exhaustive re-verification"
-            f"{f' ({context})' if context else ''}: measured wce {wce} > "
-            f"ET {et} on {circuit.name!r} ({circuit.n_inputs} inputs)"
+            f"{f' ({context})' if context else ''}: measured {metric} "
+            f"{val:g} > ET {et:g} on {circuit.name!r} "
+            f"({circuit.n_inputs} inputs)"
         )
-    return wce
+    return val
 
 
 def harvest(template, params: TemplateParams, exact_values: np.ndarray,
-            et: int, *, engine: str, name: str = "approx",
-            wall_s: float = 0.0, meta: dict | None = None) -> Candidate:
+            et: float, *, engine: str, metric: str = "wce",
+            name: str = "approx", wall_s: float = 0.0,
+            meta: dict | None = None) -> Candidate:
     """Turn a raw parameter assignment into a verified :class:`Candidate`.
 
     This is the code path every engine's winners go through — previously
     copy-pasted between the SMT ``record`` and the tensor harvest loop.
+    ``metric`` is the job's chosen error metric: the exhaustive re-verify
+    bounds *that* statistic, so an ``mae``-signed store entry was really
+    proven under mae.  (A wce-guided engine is sound for mae for free —
+    ``mae <= wce`` pointwise — but mse has no such bound, and either way
+    the verification here is what the signature's claim rests on.)
     """
     circuit = synthesize(template.instantiate(params, name=name))
-    verify_circuit(circuit, exact_values, et,
+    verify_circuit(circuit, exact_values, et, metric=metric,
                    context=f"engine={engine}, proxies={template.proxies(params)}")
     return Candidate(
         circuit=circuit,
@@ -225,6 +234,26 @@ def harvest(template, params: TemplateParams, exact_values: np.ndarray,
 # ---------------------------------------------------------------------------
 # engines
 # ---------------------------------------------------------------------------
+def _check_metric(job: SearchJob, engine: str,
+                  supported: tuple[str, ...]) -> None:
+    """Reject metric/engine combinations that cannot be made sound.
+
+    The SMT miter and the tensorized population search *guide* by
+    worst-case error; a ``wce <= ET`` result is automatically
+    ``mae <= ET`` (pointwise bound), so those engines also serve mae jobs
+    (conservatively).  ``mse`` has no such bound — only the anneal engine
+    scores it natively.
+    """
+    if job.error_metric not in ERROR_METRICS:
+        raise KeyError(f"unknown error metric {job.error_metric!r}; "
+                       f"known: {ERROR_METRICS}")
+    if job.error_metric not in supported:
+        raise ValueError(
+            f"engine {engine!r} cannot bound metric {job.error_metric!r} "
+            f"(supports {supported}); use the anneal engine"
+        )
+
+
 class SmtEngine:
     """The paper's progressive proxy-constrained SMT search (needs z3)."""
 
@@ -238,6 +267,7 @@ class SmtEngine:
     def run(self, job: SearchJob) -> SearchOutcome:
         from .search import progressive_search
 
+        _check_metric(job, self.name, ("wce", "mae"))
         return progressive_search(
             job.exact(), et=job.et, method=self.method,
             wall_budget_s=job.budget_s, seed=job.seed, **self.search_kw
@@ -257,6 +287,7 @@ class TensorEngine:
     def run(self, job: SearchJob) -> SearchOutcome:
         from .tensor_search import tensor_search
 
+        _check_metric(job, self.name, ("wce", "mae"))
         return tensor_search(
             job.exact(), et=job.et, seed=job.seed,
             wall_budget_s=job.budget_s, mesh=self.mesh, **self.search_kw
@@ -287,16 +318,22 @@ class AnnealEngine:
         self.pit = pit
 
     def _energy(self, tpl: SharedTemplate, p: TemplateParams,
-                exact_vals: np.ndarray, et: int) -> tuple[float, int]:
+                exact_vals: np.ndarray, et: float, metric: str
+                ) -> tuple[float, float]:
+        """Energy + the candidate's error under the job's chosen metric
+        — the one engine that *scores* mae/mse natively instead of
+        bounding them through wce."""
         vals = values_from_tables(tpl.eval_outputs(p), tpl.n_inputs)
         err = np.abs(vals.astype(np.int64) - exact_vals)
-        wce = int(err.max())
-        if wce > et:
-            return 1e6 + 100.0 * wce + float(err.sum()) / err.size, wce
+        stats = ErrorStats(wce=int(err.max()), mae=float(err.mean()),
+                           mse=float((err.astype(np.float64) ** 2).mean()))
+        val = stats.value(metric)
+        if val > et:
+            return 1e6 + 100.0 * val + float(err.sum()) / err.size, val
         used = p.sel.any(axis=0)
         lit_cnt = int(((p.lits != IGNORE) & used[:, None]).sum())
         prox = tpl.proxies(p)
-        return 10.0 * prox["PIT"] + 2.0 * lit_cnt + 3.0 * prox["ITS"], wce
+        return 10.0 * prox["PIT"] + 2.0 * lit_cnt + 3.0 * prox["ITS"], val
 
     def run(self, job: SearchJob) -> SearchOutcome:
         exact = job.exact()
@@ -331,18 +368,20 @@ class AnnealEngine:
                 np.select([u < 0.25, u < 0.5], [0, 1], default=IGNORE).astype(np.int8),
                 rng.random((m, T)) < 0.3,
             )
-            e, wce = self._energy(tpl, p, exact_vals, job.et)
+            e, val = self._energy(tpl, p, exact_vals, job.et,
+                                  job.error_metric)
             temp = self.start_temp
             for _step in range(self.steps):
                 if time.time() - t0 > job.budget_s:
                     break
                 q = propose(p)
-                e2, wce2 = self._energy(tpl, q, exact_vals, job.et)
+                e2, val2 = self._energy(tpl, q, exact_vals, job.et,
+                                        job.error_metric)
                 outcome.stats["steps"] += 1
                 if e2 <= e or rng.random() < math.exp(-(e2 - e) / max(temp, 1e-9)):
-                    p, e, wce = q, e2, wce2
+                    p, e, val = q, e2, val2
                     outcome.stats["accepted"] += 1
-                    if wce <= job.et:
+                    if val <= job.et:
                         fp = p.lits.tobytes() + p.sel.tobytes()
                         if fp not in pool:
                             pool[fp] = (e, p.copy())
@@ -354,6 +393,7 @@ class AnnealEngine:
         for _e, p in sorted(pool.values(), key=lambda ep: ep[0])[: self.keep]:
             outcome.results.append(
                 harvest(tpl, p, exact_vals, job.et, engine=self.name,
+                        metric=job.error_metric,
                         name=f"{exact.name}_anneal", wall_s=time.time() - t0)
             )
         outcome.wall_s = time.time() - t0
@@ -373,13 +413,14 @@ class RewriteEngine:
         from .baselines import mecals_like, muscat_like
 
         fn = muscat_like if self.name == "muscat" else mecals_like
+        _check_metric(job, self.name, ("wce", "mae"))
         exact = job.exact()
         t0 = time.time()
         res = fn(exact, et=job.et, seed=job.seed, wall_budget_s=job.budget_s)
         outcome = SearchOutcome(engine=self.name, benchmark=exact.name,
                                 et=job.et)
         verify_circuit(res.circuit, exact.eval_words(), job.et,
-                       context=f"engine={self.name}")
+                       metric=job.error_metric, context=f"engine={self.name}")
         outcome.results.append(
             Candidate(circuit=res.circuit, area=res.area, wall_s=res.wall_s)
         )

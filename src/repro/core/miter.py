@@ -19,6 +19,7 @@ Two backends:
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import numpy as np
 
@@ -33,12 +34,37 @@ from .templates import NonsharedTemplate, SharedTemplate, TemplateParams
 HAVE_Z3 = z3 is not None
 
 __all__ = [
+    "ErrorStats",
+    "ERROR_METRICS",
     "measure_error",
     "worst_case_error",
     "values_from_tables",
     "MiterZ3",
     "HAVE_Z3",
 ]
+
+ERROR_METRICS = ("wce", "mae", "mse")
+
+
+class ErrorStats(NamedTuple):
+    """Exhaustive error statistics of a candidate vs the exact outputs.
+
+    One measurement, three bound-able metrics: the paper's worst-case
+    error plus the MECALS-style mean metrics (ROADMAP "richer error
+    metrics").  A NamedTuple so the historical ``wce, mae = ...`` readers
+    become explicit attribute reads instead of silent mis-unpacks.
+    """
+
+    wce: int     # worst |err| over all assignments
+    mae: float   # mean |err|
+    mse: float   # mean squared err
+
+    def value(self, metric: str) -> float:
+        """The statistic a named error metric bounds."""
+        if metric not in ERROR_METRICS:
+            raise KeyError(
+                f"unknown error metric {metric!r}; known: {ERROR_METRICS}")
+        return getattr(self, metric)
 
 
 def values_from_tables(tables: np.ndarray, n_inputs: int) -> np.ndarray:
@@ -48,23 +74,25 @@ def values_from_tables(tables: np.ndarray, n_inputs: int) -> np.ndarray:
     return (bits.astype(np.uint64) * weights[:, None]).sum(axis=0)
 
 
-def measure_error(circuit: Circuit, exact_values: np.ndarray) -> tuple[int, float]:
-    """Exhaustive ``(wce, mae)`` of a candidate against the exact outputs.
+def measure_error(circuit: Circuit, exact_values: np.ndarray) -> ErrorStats:
+    """Exhaustive :class:`ErrorStats` of a candidate against the exact
+    outputs.
 
     The one measurement every consumer shares — engine harvests
     (:func:`repro.core.engine.verify_circuit`) and store writes
-    (:meth:`repro.library.OperatorStore.put_circuit`) — so new error
-    metrics (mae/mse bounds, ROADMAP) extend a single definition.
+    (:meth:`repro.library.OperatorStore.put_circuit`) — so every error
+    metric (``wce`` / ``mae`` / ``mse``) extends a single definition.
     """
     err = np.abs(circuit.eval_words().astype(np.int64)
                  - exact_values.astype(np.int64))
-    return int(err.max()), float(err.mean())
+    return ErrorStats(wce=int(err.max()), mae=float(err.mean()),
+                      mse=float((err.astype(np.float64) ** 2).mean()))
 
 
 def worst_case_error(exact: Circuit, approx: Circuit) -> int:
     """Exhaustive worst-case |exact - approx| over all assignments."""
     assert exact.n_inputs == approx.n_inputs
-    return measure_error(approx, exact.eval_words())[0]
+    return measure_error(approx, exact.eval_words()).wce
 
 
 def params_sound(

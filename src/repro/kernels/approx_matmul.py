@@ -1,5 +1,5 @@
-"""Pallas kernel: int4 x int4 LUT matmul — bit-exact emulation of an
-approximate multiplier netlist, MXU-native.
+"""Pallas kernels: LUT matmuls — bit-exact emulation of approximate
+multiplier netlists, MXU-native, at 4-bit and 8-bit operand widths.
 
 The obvious emulation of ``out[m,n] = Σ_k LUT[a[m,k], b[k,n]]`` is a gather
 per (m, k, n) — fast on a GPU's shared memory, slow on TPU.  The TPU-native
@@ -12,9 +12,31 @@ contractions that run on the MXU:
    ``O[k·16+y, n] = [b[k,n] == y]``
    — one (bm, bk·16) x (bk·16, bn) matmul.
 
-Accumulation is exact in f32 (products <= 255, K <= 2^15 ⇒ sums < 2^23).
-The K dimension is tiled by the grid's sequential last axis; the f32
-accumulator lives in the output block (revisited across k steps).
+**8-bit (W8A8) path.**  The same rewrite does not scale to 256 codes in
+one contraction: the one-hot operands and the ``R`` intermediate grow 16x
+(bm·bk·256 f32 alone overflows VMEM at useful block sizes).  But W8A8
+tables in this stack are *composed* — :mod:`repro.precision.compose`
+builds every 256x256 table as the exact shift-add of one 16x16 tile over
+operand nibbles::
+
+    LUT8[a, b] = T[al, bl] + (T[al, bh] + T[ah, bl]) << 4 + T[ah, bh] << 8
+
+so ``Σ_k LUT8[a, b]`` factors into **four 16x16-tile LUT matmuls combined
+by shift-add inside the kernel** — each over nibble planes of the codes,
+all sharing the one tile already resident in VMEM.  The wrapper recovers
+the tile from the (256, 256) table by exact integer inversion
+(:func:`repro.precision.compose.extract_tile`'s jnp twin below), keeping
+the public interface "codes + behaviour table" at every width — the
+per-layer serving stack stays a plain jitted argument and hot-swaps
+without retracing.  Tables that are *not* composed are out of contract
+for the Pallas path (the ``ref`` backend eats them).
+
+Accumulation: per k-block the contractions are exact in f32 (tile entries
+<= 255, block_k <= 128 ⇒ partial sums < 2^24 even through the x289 shift
+weights); blocks accumulate in int32, exact while
+``K * max_entry * 289 < 2^31`` (see ``WidthSpec.max_k``).  The K
+dimension is tiled by the grid's sequential last axis; the accumulator
+lives in the output block (revisited across k steps).
 """
 
 from __future__ import annotations
@@ -24,6 +46,29 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _lut16_contract(x: jax.Array, y: jax.Array, lut_f32: jax.Array
+                    ) -> jax.Array:
+    """``Σ_k LUT[x[m,k], y[k,n]]`` for 4-bit codes via the one-hot-twice
+    MXU form; shared by the 4-bit kernel (once) and the 8-bit kernel
+    (once per nibble-plane pair)."""
+    bm, bk = x.shape
+    bn = y.shape[1]
+    x_codes = jax.lax.broadcasted_iota(jnp.int32, (bm, bk, 16), 2)
+    x_oh = (x[:, :, None] == x_codes).astype(jnp.float32)
+    r = jax.lax.dot_general(
+        x_oh.reshape(bm * bk, 16),
+        lut_f32,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(bm, bk * 16)
+    y_codes = jax.lax.broadcasted_iota(jnp.int32, (bk, 16, bn), 1)
+    y_oh = (y[:, None, :] == y_codes).astype(jnp.float32)
+    return jax.lax.dot_general(
+        r, y_oh.reshape(bk * 16, bn), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
 
 
 def _kernel(a_ref, b_ref, lut_ref, out_ref, *, bk: int, nk: int):
@@ -36,48 +81,82 @@ def _kernel(a_ref, b_ref, lut_ref, out_ref, *, bk: int, nk: int):
     a = a_ref[...]          # (bm, bk) int32
     b = b_ref[...]          # (bk, bn) int32
     lut = lut_ref[...]      # (16, 16) int32
-    bm = a.shape[0]
-    bn = b.shape[1]
-
-    # R[m, k, y] = LUT[a[m, k], y] via one-hot @ LUT (MXU contraction)
-    a_codes = jax.lax.broadcasted_iota(jnp.int32, (bm, bk, 16), 2)
-    a_oh = (a[:, :, None] == a_codes).astype(jnp.float32)
-    r = jax.lax.dot_general(
-        a_oh.reshape(bm * bk, 16),
-        lut.astype(jnp.float32),
-        (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    ).reshape(bm, bk * 16)
-    # O[(k, y), n] = [b[k, n] == y]
-    b_codes = jax.lax.broadcasted_iota(jnp.int32, (bk, 16, bn), 1)
-    b_oh = (b[:, None, :] == b_codes).astype(jnp.float32)
-    o = b_oh.reshape(bk * 16, bn)
-    acc = jax.lax.dot_general(
-        r, o, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
+    acc = _lut16_contract(a, b, lut.astype(jnp.float32))
     out_ref[...] += acc.astype(jnp.int32)
+
+
+def _kernel8(a_ref, b_ref, tile_ref, out_ref, *, bk: int, nk: int):
+    """Two-level 8-bit form: four nibble-plane tile matmuls + shift-add."""
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...]          # (bm, bk) int32 in [0, 256)
+    b = b_ref[...]          # (bk, bn) int32 in [0, 256)
+    tile = tile_ref[...].astype(jnp.float32)    # (16, 16) generator tile
+    al, ah = a & 15, a >> 4
+    bl, bh = b & 15, b >> 4
+    s_ll = _lut16_contract(al, bl, tile)
+    s_lh = _lut16_contract(al, bh, tile)
+    s_hl = _lut16_contract(ah, bl, tile)
+    s_hh = _lut16_contract(ah, bh, tile)
+    # shift-add with f32-exact weights (partials < 2^24 per k-block)
+    acc = s_ll + (s_lh + s_hl) * 16.0 + s_hh * 256.0
+    out_ref[...] += acc.astype(jnp.int32)
+
+
+def _extract_tile_jnp(lut: jax.Array) -> jax.Array:
+    """jnp twin of :func:`repro.precision.compose.extract_tile` — exact
+    integer inversion of the nibble shift-add for composed tables; runs
+    inside the jitted wrapper so the (256, 256) stack entry stays the
+    swap unit."""
+    t00 = lut[0, 0] // 289
+    tx0 = (lut[:16, 0] - 272 * t00) // 17
+    t0y = (lut[0, :16] - 272 * t00) // 17
+    return lut[:16, :16] - 16 * (tx0[:, None] + t0y[None, :]) - 256 * t00
 
 
 @functools.partial(
     jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
 )
 def approx_matmul_pallas(
-    a: jax.Array,    # (M, K) int32 in [0, 16)
-    b: jax.Array,    # (K, N) int32 in [0, 16)
-    lut: jax.Array,  # (16, 16) int32
+    a: jax.Array,    # (M, K) int32 in [0, side)
+    b: jax.Array,    # (K, N) int32 in [0, side)
+    lut: jax.Array,  # (side, side) int32; side = 16 (4-bit) or 256 (8-bit)
     *,
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
+    side = lut.shape[-1]
+    if side == 16:
+        kernel, table = _kernel, lut
+    elif side == 256:
+        # the 8-bit kernel consumes the 16x16 generator tile; recover it
+        # from the composed table (exact for anything compose.py emits)
+        kernel, table = _kernel8, _extract_tile_jnp(lut)
+        # per-block f32 exactness bound: acc <= 255 * block_k * 289 must
+        # stay under 2^24 or the shift-add rounds before the int32 cast,
+        # silently breaking the bit-match-the-oracle contract
+        max_bk = (1 << 24) // (255 * 289)
+        if block_k > max_bk:
+            raise ValueError(
+                f"block_k {block_k} exceeds the 8-bit path's f32-exact "
+                f"accumulation bound ({max_bk}); pick a smaller K block"
+            )
+    else:
+        raise ValueError(f"unsupported LUT side {side}; expected 16 or 256")
+
     M, K = a.shape
     _, N = b.shape
     pm, pn, pk = (-M) % block_m, (-N) % block_n, (-K) % block_k
     # K padding uses code 0; LUT[0, 0] may be nonzero for an approximate
-    # netlist, so mask the padded-K contribution by padding `a` with a code
-    # whose LUT row is forced to zero via a 17th virtual code — instead we
-    # simply subtract the padded contribution analytically below.
+    # netlist (and a composed 8-bit table contributes exactly
+    # LUT[0, 0] = 289 * T[0, 0] per padded k), so the padded-K
+    # contribution is subtracted analytically below.
     if pm or pk:
         a = jnp.pad(a, ((0, pm), (0, pk)))
     if pk or pn:
@@ -85,7 +164,7 @@ def approx_matmul_pallas(
     grid = ((M + pm) // block_m, (N + pn) // block_n, (K + pk) // block_k)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, bk=block_k, nk=grid[2]),
+        functools.partial(kernel, bk=block_k, nk=grid[2]),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
@@ -95,7 +174,7 @@ def approx_matmul_pallas(
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M + pm, N + pn), jnp.int32),
         interpret=interpret,
-    )(a, b, lut)
+    )(a, b, table)
     out = out[:M, :N]
     if pk:  # remove the LUT[0,0] contribution of the K padding
         out = out - jnp.int32(pk) * lut[0, 0]

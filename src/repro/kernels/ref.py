@@ -54,16 +54,37 @@ def template_eval(
 
 
 # ---------------------------------------------------------------------------
-# approx_matmul — int4 x int4 LUT matmul (bit-exact emulation of an
-# approximate multiplier netlist; LUT[a, b] = netlist(a, b))
+# approx_matmul — LUT matmul at any operand width (bit-exact emulation of
+# an approximate multiplier netlist; LUT[a, b] = netlist(a, b)).  The
+# gather is the *semantic definition* for every width: codes index a
+# square behaviour table — (16, 16) for the native 4-bit regime,
+# (256, 256) for composed W8A8 tables — so this oracle accepts arbitrary
+# tables, including non-composed ones the Pallas two-level path refuses.
 # ---------------------------------------------------------------------------
 def approx_matmul(
-    a: jax.Array,     # (M, K) int32, values in [0, 16)
-    b: jax.Array,     # (K, N) int32, values in [0, 16)
-    lut: jax.Array,   # (16, 16) int32 — approximate product table
+    a: jax.Array,     # (M, K) int32, values in [0, side)
+    b: jax.Array,     # (K, N) int32, values in [0, side)
+    lut: jax.Array,   # (side, side) int32 — approximate product table
 ) -> jax.Array:       # (M, N) int32 — sum_k LUT[a[m,k], b[k,n]]
     prods = lut[a[:, :, None], b[None, :, :]]        # (M, K, N)
     return prods.sum(axis=1, dtype=jnp.int32)
+
+
+def approx_matmul_two_level(
+    a: jax.Array,     # (M, K) int32, values in [0, 256)
+    b: jax.Array,     # (K, N) int32, values in [0, 256)
+    tile: jax.Array,  # (16, 16) int32 — the composed table's generator
+) -> jax.Array:
+    """Tile-form oracle of the 8-bit kernel: four nibble-plane 16x16 LUT
+    matmuls combined by shift-add.  For any composed table
+    ``lut8 = tile_to_width(tile)`` this equals
+    ``approx_matmul(a, b, lut8)`` — the identity the kernel tests pin."""
+    def s(x, y):
+        return approx_matmul(x, y, tile)
+
+    al, ah = a & 15, a >> 4
+    bl, bh = b & 15, b >> 4
+    return s(al, bl) + ((s(al, bh) + s(ah, bl)) << 4) + (s(ah, bh) << 8)
 
 
 # ---------------------------------------------------------------------------

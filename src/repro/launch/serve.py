@@ -17,6 +17,11 @@ Three serving modes:
   budget), and ``--watch-library`` additionally picks up operators a
   background ``python -m repro.fleet`` sweep adds mid-serve.  The decode
   step never retraces across swaps.
+
+``--width`` picks the LUT operand width for any library mode: 4 serves
+W4A4 on the native 16x16 tables, 8 serves W8A8 on 256x256 tables composed
+from the same searched blocks (:mod:`repro.precision`); all three modes
+and the watcher work at either width.
 """
 
 from __future__ import annotations
@@ -44,11 +49,11 @@ from ..serving.loadgen import PROFILES
 from .mesh import make_smoke_mesh
 
 
-def _frontier(library: str):
-    from ..library import load_mul_frontier
+def _frontier(library: str, width):
+    from ..precision.plans import load_frontier
 
     try:
-        return load_mul_frontier(library)
+        return load_frontier(library, width)
     except LookupError as e:
         raise SystemExit(str(e))
 
@@ -81,6 +86,10 @@ def main() -> None:
     ap.add_argument("--library", default=None,
                     help="approximate-operator store; routes MLP matmuls "
                          "through QoS-selected per-layer LUT multipliers")
+    ap.add_argument("--width", type=int, choices=(4, 8), default=4,
+                    help="LUT operand width: 4 = native W4A4 (16x16 "
+                         "tables), 8 = W8A8 — searched blocks composed "
+                         "into 256x256 tables (repro.precision)")
     ap.add_argument("--qos-budget", type=float, default=50.0,
                     help="startup QoS budget in summed compiled-table mae16 "
                          "units (non-adaptive mode only)")
@@ -125,12 +134,17 @@ def main() -> None:
     cfg = get_config(args.arch, reduced=args.reduced)
     plan = compiled = exact_area = controller = watcher = None
     if args.library:
+        from ..precision.plans import select_width
+
         if cfg.family == "audio":
             raise SystemExit("--library: LUT routing supports LM families only")
-        cfg = cfg.with_approx_mlp()
-        compiled, exact_area, bits = _frontier(args.library)
+        width = select_width(cfg, requested=args.width)
+        cfg = cfg.with_approx_mlp(bits=width.bits)
+        compiled, exact_area, bits = _frontier(args.library, width)
         print(f"library {args.library}: {len(compiled)} operator(s) on the "
-              f"{bits}-bit multiplier frontier")
+              f"{bits}-bit multiplier frontier "
+              f"(serving W{width.bits}A{width.bits}, "
+              f"{width.side}x{width.side} tables)")
         if args.adaptive:
             ladder = PlanLadder.build(compiled, cfg.n_layers,
                                       exact_area=exact_area,
@@ -147,7 +161,11 @@ def main() -> None:
         else:
             plan = _startup_plan(cfg, compiled, exact_area, args.qos_budget)
         if args.watch_library:
-            watcher = LibraryWatcher(args.library, min_poll_s=args.poll_s)
+            # non-native widths pin the watcher to the composed frontier;
+            # width 4 keeps the legacy block-frontier reload semantics
+            tb = width.bits if width.bits != 4 else None
+            watcher = LibraryWatcher(args.library, min_poll_s=args.poll_s,
+                                     target_bits=tb)
 
     mesh = make_smoke_mesh()
     key = jax.random.PRNGKey(args.seed)
@@ -193,6 +211,12 @@ def main() -> None:
     if args.telemetry:
         telemetry.dump(args.telemetry)
         print(f"telemetry -> {args.telemetry}")
+    if engine.plan is not None:
+        # routing facts for smoke gates: the serving width and how many
+        # layers actually run a searched (non-exact) operator
+        s["width_bits"] = engine.width.bits if engine.width else None
+        s["approx_layers"] = sum(
+            1 for c in engine.plan.choices if c.key is not None)
     if args.bench_json:
         from pathlib import Path
 

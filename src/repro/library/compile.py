@@ -1,32 +1,35 @@
-"""Lower stored operators to the packed LUT ``kernels/approx_matmul`` eats.
+"""Lower stored operators to the packed LUTs ``kernels/approx_matmul`` eats.
 
-The Pallas kernel consumes a dense ``(16, 16) int32`` table over unsigned
-4-bit codes.  :func:`repro.quant.lut.build_lut` only handled the 4x4-bit
-multiplier; here any stored operator lowers to that format:
+The Pallas kernels consume dense behaviour tables over unsigned codes —
+``(16, 16)`` for the native 4-bit regime, ``(256, 256)`` for the composed
+W8A8 regime.  :func:`repro.quant.lut.build_lut` only handled the 4x4-bit
+multiplier; here any stored 1–4-bit operator lowers to any supported
+*target width* through :mod:`repro.precision.compose`:
 
-* **4-bit multiplier** — direct evaluation (identical to ``build_lut``).
-* **sub-4-bit multiplier** — recursive tiling: split each 4-bit operand
-  into ``ceil(4/b)`` b-bit chunks and sum the shifted chunk products
-  ``M[a_i, b_j] << b(i+j)``, with ``M`` the operator's base table.  This
-  is how small approximate building blocks scale up in hardware
-  (Kulkarni-style 2x2 multipliers composing a 4x4).
-* **adder** — carry-ripple chaining of b-bit blocks: each chunk sum goes
-  through the approximate adder, the carry is folded in with a second
-  application of the block, and chunk results concatenate.  The result is
-  the operator's full 16x16 behaviour map (useful for accumulator
-  emulation and error analysis; the matmul route consumes mul tables).
+* **block == target** — direct evaluation (identical to ``build_lut``).
+* **multiplier below target** — shift-add tiling of b-bit chunk products
+  (Kulkarni-style 2x2 blocks composing a 4x4; the same recurrence carries
+  the 16x16 tile up to 256x256 for W8A8, where the two-level form keeps
+  the table kernel-consumable).
+* **adder** — carry-ripple chaining of b-bit blocks at the target width.
 
-Compiled tables are cached in-memory, keyed by the record's content key —
-re-planning a fleet of layers hits the cache, not the evaluator.
+Composition exactness identities are checked at build time inside the
+composer (exact blocks must reproduce exact tables); compiled tables are
+cached in-memory, keyed by ``(record content key, op_kind, bits,
+target_bits)`` — re-planning a fleet of layers hits the cache, not the
+evaluator.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import numpy as np
 
 from ..core.circuits import Circuit
+from ..precision import compose
+from ..precision.widths import NATIVE_BLOCK_BITS, exact_table, get_width
 from ..quant.lut import build_lut
 from .store import OperatorRecord
 
@@ -44,8 +47,8 @@ __all__ = [
 
 def base_table(circuit: Circuit, bits: int) -> np.ndarray:
     """The operator's ``(2**bits, 2**bits)`` behaviour map — a checked,
-    widened view of :func:`repro.quant.lut.build_lut` (tiling shifts need
-    int64 headroom)."""
+    widened view of :func:`repro.quant.lut.build_lut` (composition shifts
+    need int64 headroom)."""
     assert circuit.n_inputs == 2 * bits, (
         f"expected {2 * bits} inputs for a {bits}-bit operator, "
         f"got {circuit.n_inputs}"
@@ -53,96 +56,97 @@ def base_table(circuit: Circuit, bits: int) -> np.ndarray:
     return build_lut(circuit).astype(np.int64)
 
 
-def _chunks(x: np.ndarray, bits: int) -> list[np.ndarray]:
-    mask = (1 << bits) - 1
-    n = -(-4 // bits)  # ceil(4 / bits)
-    return [(x >> (bits * i)) & mask for i in range(n)]
-
-
-def _tile_mul(base: np.ndarray, bits: int) -> np.ndarray:
-    """Compose a 4x4 multiplier table from a b-bit multiplier block."""
-    a = np.arange(16)
-    ai, bj = _chunks(a, bits), _chunks(a, bits)
-    out = np.zeros((16, 16), dtype=np.int64)
-    for i, ac in enumerate(ai):
-        for j, bc in enumerate(bj):
-            out += base[ac[:, None], bc[None, :]] << (bits * (i + j))
-    return out
-
-
-def _chain_add(base: np.ndarray, bits: int) -> np.ndarray:
-    """Compose a 4+4-bit adder table by carry-rippling b-bit blocks."""
-    mask = (1 << bits) - 1
-    a = np.arange(16)
-    ai, bj = _chunks(a, bits), _chunks(a, bits)
-    carry = np.zeros((16, 16), dtype=np.int64)
-    out = np.zeros((16, 16), dtype=np.int64)
-    for i, (ac, bc) in enumerate(zip(ai, bj)):
-        t = base[ac[:, None], bc[None, :]]
-        if i == 0:
-            s, carry = t & mask, t >> bits
-        else:
-            # fold the incoming carry with a second block application
-            t2 = base[t & mask, carry]
-            s = t2 & mask
-            carry = np.minimum(1, (t >> bits) + (t2 >> bits))
-        out += s << (bits * i)
-    # the final carry sits one chunk above the last block (bit 4 for 1/2/4-bit
-    # blocks, bit 6 for 3-bit blocks whose top chunk spans bits 3..5)
-    return out + (carry << (bits * len(ai)))
-
-
 def exact_lut16(op_kind: str) -> np.ndarray:
-    """Exact 16x16 reference semantics for a compiled table."""
-    a = np.arange(16, dtype=np.int64)
-    if op_kind == "mul":
-        return a[:, None] * a[None, :]
-    if op_kind == "adder":
-        return a[:, None] + a[None, :]
-    raise ValueError(f"unknown op_kind {op_kind!r}")
+    """Exact 16x16 reference semantics (the 4-bit special case of
+    :func:`repro.precision.widths.exact_table`)."""
+    return exact_table(op_kind, NATIVE_BLOCK_BITS)
 
 
 @dataclass(frozen=True)
 class CompiledLut:
-    """A (16, 16) table plus its error metrics *at the compiled level* —
-    tiling amplifies block errors, so QoS prediction must use these, not
-    the block-level wce."""
+    """A behaviour table at its compiled *target width*, plus its error
+    metrics at that level — composition amplifies block errors, so QoS
+    prediction must use these, not the block-level wce.
 
-    lut: np.ndarray          # (16, 16) int32
+    ``wce16`` / ``mae16`` keep their historical names but are measured
+    against the exact table of ``target_bits`` (for an 8-bit target they
+    span the full 256x256 composition); :attr:`wce` / :attr:`mae` are the
+    width-neutral spellings.  ``tile`` holds the 16x16 generator tile of
+    a wide multiplier table — the array the two-level Pallas kernel
+    actually loads.
+    """
+
+    lut: np.ndarray          # (side, side) int32 at the target width
     op_kind: str
-    bits: int
+    bits: int                # the *block* width the operator was searched at
     wce16: int               # worst |err| of the compiled table vs exact
     mae16: float             # mean |err| of the compiled table vs exact
+    target_bits: int = NATIVE_BLOCK_BITS
+    tile: np.ndarray | None = None   # 16x16 generator (wide mul targets only)
+
+    @property
+    def wce(self) -> int:
+        return self.wce16
+
+    @property
+    def mae(self) -> float:
+        return self.mae16
+
+    @property
+    def side(self) -> int:
+        return self.lut.shape[-1]
 
 
-def compile_circuit(circuit: Circuit, op_kind: str, bits: int) -> CompiledLut:
+def compile_circuit(circuit: Circuit, op_kind: str, bits: int,
+                    target_bits: int = NATIVE_BLOCK_BITS) -> CompiledLut:
+    """Lower a b-bit block netlist to its ``target_bits`` behaviour table."""
+    get_width(target_bits)   # reject unsupported targets early
     base = base_table(circuit, bits)
-    if op_kind == "mul":
-        lut = base if bits == 4 else _tile_mul(base, bits)
-    elif op_kind == "adder":
-        lut = _chain_add(base, bits)
-    else:
-        raise ValueError(f"unknown op_kind {op_kind!r}")
-    err = np.abs(lut - exact_lut16(op_kind))
+    tile = None
+    if op_kind == "mul" and target_bits > NATIVE_BLOCK_BITS:
+        tile = (base if bits == NATIVE_BLOCK_BITS
+                else compose.compose_table(base, "mul", bits,
+                                           NATIVE_BLOCK_BITS))
+        tile = tile.astype(np.int32)
+    lut = compose.compose_table(base, op_kind, bits, target_bits)
+    err = np.abs(lut - exact_table(op_kind, target_bits))
     return CompiledLut(
         lut=lut.astype(np.int32),
         op_kind=op_kind,
         bits=bits,
         wce16=int(err.max()),
         mae16=float(err.mean()),
+        target_bits=target_bits,
+        tile=tile,
     )
 
 
-def load_mul_frontier(library) -> tuple[list[tuple[OperatorRecord, "CompiledLut"]], float, int]:
-    """One-stop loader for consumers (example, serve): open a store, take
-    the widest-operand multiplier frontier, compile every frontier record,
+def load_mul_frontier(
+    library, target_bits: int | None = None
+) -> tuple[list[tuple[OperatorRecord, "CompiledLut"]], float, int]:
+    """One-stop loader for consumers (example, serve, watcher): open a
+    store, build the multiplier frontier, compile every frontier record,
     and return ``(compiled, exact_area, bits)``.
+
+    ``target_bits=None`` is the legacy native path: the widest-operand
+    block frontier, compiled to the 16x16 LUT, with the store's own
+    per-record areas (third element = the block width).
+
+    With an explicit ``target_bits`` (the W8A8 path is ``8``), *every*
+    stored multiplier block is composed up to the target, its area scaled
+    by the block count the composition spends
+    (:func:`repro.precision.compose.compose_blocks` — partial-product
+    glue adders are ignored, so areas are a lower bound), and the
+    frontier is re-taken over ``(composed area, composed wce)``: a tiny
+    2-bit block that composes into a terrible 256x256 table loses to a
+    4-bit block that composes cleanly.  ``exact_area`` is the exact
+    ``target_bits`` array multiplier's.
 
     Raises :class:`LookupError` when the store holds no multipliers.
     """
     from ..core.arith import benchmark
     from ..core.synth import area
-    from .pareto import ParetoFrontier
+    from .pareto import ParetoFrontier, pareto_front
     from .store import OperatorStore
 
     store = OperatorStore(library)
@@ -150,33 +154,48 @@ def load_mul_frontier(library) -> tuple[list[tuple[OperatorRecord, "CompiledLut"
     if not sigs:
         raise LookupError(
             f"no multiplier operators in library {library}; fill it with: "
-            f"python -m repro.core.search --benchmark mul_i4 --library {library}"
+            f"python -m repro.fleet --library {library} --sweep smoke"
         )
-    bits = max(s.bits for s in sigs)
-    frontier = ParetoFrontier.from_store(store, "mul", bits)
-    compiled = [(rec, compile_record(rec)) for rec in frontier.front]
-    exact_area = area(benchmark(f"mul_i{2 * bits}"))
-    return compiled, exact_area, bits
+    if target_bits is None:
+        bits = max(s.bits for s in sigs)
+        frontier = ParetoFrontier.from_store(store, "mul", bits)
+        compiled = [(rec, compile_record(rec)) for rec in frontier.front]
+        exact_area = area(benchmark(f"mul_i{2 * bits}"))
+        return compiled, exact_area, bits
+
+    width = get_width(target_bits)
+    pairs: list[tuple[OperatorRecord, CompiledLut]] = []
+    for rec in store.query("mul"):
+        comp = compile_record(rec, target_bits=width.bits)
+        scaled = dataclasses.replace(
+            rec, area=rec.area * compose.compose_blocks(rec.signature.bits,
+                                                        width.bits))
+        pairs.append((scaled, comp))
+    front = pareto_front(pairs, (lambda p: p[0].area,
+                                 lambda p: float(p[1].wce16)))
+    exact_area = area(benchmark(width.benchmark_name))
+    return front, exact_area, width.bits
 
 
 # ---------------------------------------------------------------------------
 # in-memory compile cache
 # ---------------------------------------------------------------------------
-_CACHE: dict[tuple[str, str, int], CompiledLut] = {}
+_CACHE: dict[tuple[str, str, int, int], CompiledLut] = {}
 _STATS = {"hits": 0, "misses": 0}
 
 
-def compile_record(record: OperatorRecord) -> CompiledLut:
-    """Compile a stored operator, memoized by its content key."""
+def compile_record(record: OperatorRecord,
+                   target_bits: int = NATIVE_BLOCK_BITS) -> CompiledLut:
+    """Compile a stored operator, memoized by (content key, target width)."""
     key = (record.key or record.content_key(), record.signature.op_kind,
-           record.signature.bits)
+           record.signature.bits, target_bits)
     hit = _CACHE.get(key)
     if hit is not None:
         _STATS["hits"] += 1
         return hit
     _STATS["misses"] += 1
     out = compile_circuit(record.circuit, record.signature.op_kind,
-                          record.signature.bits)
+                          record.signature.bits, target_bits)
     _CACHE[key] = out
     return out
 

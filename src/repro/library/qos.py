@@ -24,7 +24,7 @@ from typing import Callable, Iterator, Sequence
 
 import numpy as np
 
-from .compile import CompiledLut, exact_lut16
+from .compile import CompiledLut
 from .store import OperatorRecord
 
 __all__ = [
@@ -261,11 +261,17 @@ def validate_lut_stack(prev, new) -> None:
     ps, pd = tuple(prev.shape), prev.dtype
     ns, nd = tuple(new.shape), new.dtype
     if ps != ns or pd != nd:
+        def _w(shape):   # best-effort width label for the error message
+            side = shape[-1] if shape else 0
+            b = max(side, 1).bit_length() - 1
+            return f"{b}-bit" if side == 1 << b and side >= 2 else "?"
+
         raise ValueError(
-            f"refreshed LUT stack is {ns}/{nd} but the serving plan runs "
-            f"{ps}/{pd}; a swap would retrace the decode step — refusing. "
-            f"(Did the refreshed frontier change operator bit width or "
-            f"layer count?)"
+            f"refreshed LUT stack is {ns}/{nd} ({_w(ns)}) but the serving "
+            f"plan runs {ps}/{pd} ({_w(ps)}); a swap would retrace the "
+            f"decode step — refusing.  (Did the refreshed frontier change "
+            f"operator bit width or layer count?  A width move needs a "
+            f"restart with --width, not a hot-swap.)"
         )
 
 
@@ -312,11 +318,27 @@ def stack_luts(
     plan: LayerPlan,
     records: Sequence[tuple[OperatorRecord, CompiledLut]],
 ) -> np.ndarray:
-    """Materialize a plan as the ``(L, 16, 16) int32`` array the model
-    forward consumes; exact layers get the exact product table."""
+    """Materialize a plan as the ``(L, side, side) int32`` array the model
+    forward consumes; exact layers get the exact product table.
+
+    The side follows the compiled frontier's target width — a 4-bit
+    frontier stacks ``(L, 16, 16)``, an 8-bit (W8A8) one
+    ``(L, 256, 256)`` — so a plan can never silently mix widths: every
+    compiled table in ``records`` must share one side.
+    """
+    from ..precision.widths import exact_table
+
+    sides = {comp.lut.shape[-1] for _, comp in records}
+    if len(sides) > 1:
+        raise ValueError(
+            f"frontier mixes LUT sides {sorted(sides)}; a plan stack must "
+            f"be single-width"
+        )
+    side = sides.pop() if sides else 16
+    bits = side.bit_length() - 1
     by_key = {rec.key: comp for rec, comp in records}
-    exact = exact_lut16("mul").astype(np.int32)
-    out = np.zeros((plan.n_layers, 16, 16), dtype=np.int32)
+    exact = exact_table("mul", bits).astype(np.int32)
+    out = np.zeros((plan.n_layers, side, side), dtype=np.int32)
     for c in plan.choices:
         out[c.layer] = exact if c.key is None else by_key[c.key].lut
     return out

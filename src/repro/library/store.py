@@ -115,7 +115,7 @@ class OperatorSignature:
 
     op_kind: str        # "mul" | "adder"
     bits: int           # operand bit width (the paper: 2, 3, 4)
-    error_metric: str   # "wce" (worst-case error) for the paper's miter
+    error_metric: str   # "wce" | "mae" | "mse" (paper's miter: wce)
     threshold: int      # the ET the operator was searched under
 
     def __post_init__(self) -> None:
@@ -125,6 +125,23 @@ class OperatorSignature:
             raise ValueError(f"unknown op_kind {self.op_kind!r}")
         if not 1 <= self.bits <= 4:
             raise ValueError("LUT lowering supports 1..4-bit operands")
+        # the threshold is part of the dirname; a fractional one (tempting
+        # for mae/mse signatures) would not round-trip through
+        # from_dirname — 'mae0.5' parses as metric 'mae0.' — so records
+        # would be written but never correctly read back.  Refuse loudly.
+        if self.threshold != int(self.threshold) or self.threshold < 1:
+            raise ValueError(
+                f"threshold must be a positive integer (got "
+                f"{self.threshold!r}); signature dirnames cannot encode "
+                f"fractional thresholds — scale the metric instead"
+            )
+        # normalize 2.0 -> 2 so the dirname never renders a float repr
+        object.__setattr__(self, "threshold", int(self.threshold))
+        if self.error_metric != self.error_metric.rstrip("0123456789."):
+            raise ValueError(
+                f"error_metric {self.error_metric!r} must not end in "
+                f"digits (it would not round-trip through the dirname)"
+            )
 
     @property
     def dirname(self) -> str:
@@ -160,6 +177,7 @@ class OperatorRecord:
     area: float
     wce: int                      # measured exhaustively at store time
     mae: float                    # mean |err| over all assignments (QoS predictor)
+    mse: float = -1.0             # mean squared err (-1 = pre-mse record)
     source: str = "unknown"       # shared | xpat | muscat | mecals | tensor | ...
     proxies: dict = field(default_factory=dict)
     params: TemplateParams | None = None
@@ -214,6 +232,7 @@ class OperatorStore:
             area=record.area,
             wce=record.wce,
             mae=record.mae,
+            mse=record.mse,
             source=record.source,
             proxies=record.proxies,
             meta=record.meta,
@@ -235,19 +254,23 @@ class OperatorStore:
     ) -> OperatorRecord:
         """Measure a candidate against the exact reference and store it.
 
-        Raises if the candidate violates the signature's error threshold —
-        the store only ever holds *sound* operators.
+        Raises if the candidate violates the signature's error threshold
+        *under the signature's own metric* (``wce`` / ``mae`` / ``mse``)
+        — the store only ever holds sound operators, and an mae-signed
+        record was really validated under mae, not a wce proxy.
         """
-        wce, mae = measure_error(circuit, signature.exact_values())
-        if wce > signature.threshold:
+        stats = measure_error(circuit, signature.exact_values())
+        val = stats.value(signature.error_metric)
+        if val > signature.threshold:
             raise ValueError(
-                f"unsound operator: measured wce {wce} > threshold "
-                f"{signature.threshold} for {signature.dirname}"
+                f"unsound operator: measured {signature.error_metric} "
+                f"{val:g} > threshold {signature.threshold} for "
+                f"{signature.dirname}"
             )
         rec = OperatorRecord(
             signature=signature, circuit=circuit, area=float(area),
-            wce=wce, mae=mae, source=source, proxies=dict(proxies or {}),
-            params=params, meta=dict(meta or {}),
+            wce=stats.wce, mae=stats.mae, mse=stats.mse, source=source,
+            proxies=dict(proxies or {}), params=params, meta=dict(meta or {}),
         )
         self.put(rec)
         return rec
@@ -292,6 +315,7 @@ class OperatorStore:
             area=float(doc["area"]),
             wce=int(doc["wce"]),
             mae=float(doc["mae"]),
+            mse=float(doc.get("mse", -1.0)),
             source=doc.get("source", "unknown"),
             proxies=doc.get("proxies", {}),
             params=_params_from_dict(doc.get("params")),

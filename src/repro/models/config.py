@@ -99,6 +99,9 @@ class ModelConfig:
     #                         inputs with f32 accumulation (§Perf iteration)
     # --- approximate-arithmetic emulation (the paper's Layer B hook) ---
     approx_mlp: bool = False               # route MLP matmuls through the LUT
+    approx_bits: int = 4                   # LUT operand width: 4 (W4A4 native)
+    #                                        or 8 (W8A8, composed 256x256
+    #                                        tables via repro.precision)
 
     @property
     def hd(self) -> int:
@@ -172,8 +175,10 @@ class ModelConfig:
         inactive = (mo.n_experts - mo.top_k) * 3 * self.d_model * mo.d_ff_expert
         return self.n_params() - self.n_layers * inactive
 
-    def with_approx_mlp(self) -> "ModelConfig":
-        return replace(self, approx_mlp=True)
+    def with_approx_mlp(self, bits: int = 4) -> "ModelConfig":
+        """Route MLP matmuls through the approximate-multiplier LUT at the
+        given operand width (4 = native W4A4, 8 = composed W8A8)."""
+        return replace(self, approx_mlp=True, approx_bits=int(bits))
 
 
 @dataclass(frozen=True)

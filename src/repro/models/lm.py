@@ -129,10 +129,11 @@ def forward_lm(
 
     ``batch['tokens']``: (B, S) int32.  VLM batches add ``'patches'``
     (B, P, d_vision) which are projected and prepended.
-    ``lut``: optional approximate-multiplier table — either one (16, 16)
-    table shared by every layer, or a per-layer (n_layers, 16, 16) stack
-    (a QoS :class:`~repro.library.qos.LayerPlan`), which rides through the
-    layer scan alongside the stacked params.
+    ``lut``: optional approximate-multiplier table — either one
+    (side, side) table shared by every layer, or a per-layer
+    (n_layers, side, side) stack (a QoS
+    :class:`~repro.library.qos.LayerPlan`), which rides through the layer
+    scan alongside the stacked params; side = 16 (W4A4) or 256 (W8A8).
     ``scan_unroll``: unroll the layer scan — used by the roofline analysis
     (XLA cost_analysis counts a rolled scan body once; see dryrun.py).
     """
@@ -298,13 +299,20 @@ def decode_step(
     tokens: jax.Array,   # (B, 1) int32 — the newest token
     pos: jax.Array,      # () int32 — its absolute position
     *,
-    luts: jax.Array | None = None,   # (L, 16, 16) per-layer LUTs or (16, 16)
+    luts: jax.Array | None = None,   # (L, side, side) per-layer LUTs or
+    #                                  (side, side); side = 16 (W4A4) or
+    #                                  256 (composed W8A8 tables)
 ) -> tuple[jax.Array, list[Params]]:
     """One serving step: append token at ``pos``, return next-token logits.
 
     ``luts``: optional approximate-multiplier tables routing each layer's
     MLP matmuls (QoS plan); the decode loop is unrolled per layer, so the
-    per-layer table is just indexed out.
+    per-layer table is just indexed out.  The table side picks the
+    operand width (``repro.quant.approx_linear`` infers bias and code
+    range from it), so the same decode step serves W4A4 ``(L, 16, 16)``
+    and W8A8 ``(L, 256, 256)`` stacks — at a *fixed* width per trace:
+    shapes are jit-static, so width moves recompile while same-width plan
+    swaps never do.
 
     ``luts`` must ride through ``jax.jit`` as a *real argument* (a jax
     array / tracer), never a closed-over host constant: the adaptive

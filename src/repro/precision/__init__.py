@@ -1,0 +1,99 @@
+"""Multi-bit-width operator pipeline: width as a first-class axis.
+
+The paper's template search lives at 1–4-bit operands, but the
+edge-deployment regime its operators target is W8A8.  This package makes
+the bridge systematic instead of hardwired:
+
+* :mod:`repro.precision.widths` — the width registry: code ranges, LUT
+  shapes, signed-code biases, accumulator contracts, per-layer stack
+  shapes.  Pure facts, numpy-only.
+* :mod:`repro.precision.compose` — the composer: generalizes the 16x16
+  tile/chain lowering to any target width (searched 1–4-bit blocks
+  shift-add into 256x256 product tables; adders carry-chain), with
+  build-time exactness identities (exact blocks must compose to exact
+  tables) and the tile<->table inversion the two-level Pallas kernel
+  relies on.  Numpy-only.
+* :mod:`repro.precision.plans` — the planner: width selection from a
+  model config, width-compiled frontiers, per-width plan-ladder
+  construction.  Imports :mod:`repro.library` (and so is lazy here, the
+  same PEP 562 arrangement the library package uses, keeping
+  widths/compose importable from jax-free fleet workers).
+
+Consumers: ``library/compile.py`` lowers through the composer,
+``kernels/approx_matmul`` dispatches on the table side, ``quant``
+generalizes its signed decomposition per width, ``qos``/``serving``
+validate stacks per width, and ``launch/serve.py`` exposes ``--width``.
+"""
+
+from .compose import (
+    CompositionError,
+    chain_add,
+    compose_blocks,
+    compose_table,
+    extract_tile,
+    is_composed,
+    tile_mul,
+    tile_to_width,
+    verify_exactness,
+)
+from .widths import (
+    NATIVE_BLOCK_BITS,
+    SUPPORTED_WIDTHS,
+    WIDTHS,
+    WidthSpec,
+    exact_table,
+    get_width,
+    stack_shape,
+    width_from_lut,
+    width_from_side,
+    width_from_stack,
+)
+
+# plans.py imports repro.library (which imports this package back for the
+# composer) — lazy export breaks the cycle and keeps widths/compose
+# importable without the library/jax stack.
+_LAZY = {
+    "DEFAULT_WIDTH_BITS": ".plans",
+    "select_width": ".plans",
+    "load_frontier": ".plans",
+    "WidthFrontier": ".plans",
+    "build_ladder": ".plans",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from importlib import import_module
+
+        value = getattr(import_module(_LAZY[name], __name__), name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "NATIVE_BLOCK_BITS",
+    "SUPPORTED_WIDTHS",
+    "WIDTHS",
+    "WidthSpec",
+    "exact_table",
+    "get_width",
+    "stack_shape",
+    "width_from_lut",
+    "width_from_side",
+    "width_from_stack",
+    "CompositionError",
+    "chain_add",
+    "compose_blocks",
+    "compose_table",
+    "extract_tile",
+    "is_composed",
+    "tile_mul",
+    "tile_to_width",
+    "verify_exactness",
+    "DEFAULT_WIDTH_BITS",
+    "select_width",
+    "load_frontier",
+    "WidthFrontier",
+    "build_ladder",
+]

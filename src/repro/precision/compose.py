@@ -1,0 +1,245 @@
+"""Operator composition: small approximate blocks -> wide behaviour tables.
+
+Generalizes ``repro.library.compile``'s hardcoded 16x16 ``_tile_mul`` /
+``_chain_add`` to any target width, the way hardware builds wide
+approximate multipliers out of small approximate sub-blocks (Kulkarni
+2x2s composing a 4x4; AxOSyn composing larger operators from smaller
+ones):
+
+* :func:`tile_mul` — a ``target``-bit multiplier table from a ``b``-bit
+  multiplier block: split each operand into ``ceil(target/b)`` b-bit
+  chunks and sum the shifted chunk products ``M[a_i, b_j] << b(i+j)``.
+* :func:`chain_add` — a ``target``-bit adder table by carry-rippling
+  b-bit adder blocks (the carry is folded in with a second block
+  application per chunk).
+* :func:`tile_to_width` / :func:`extract_tile` — the *two-level* 8-bit
+  form the Pallas kernel consumes: a 256x256 product table is the exact
+  shift-add of one 16x16 tile over operand nibbles, and that tile is
+  exactly recoverable from the composed table (integer inversion of the
+  shift-add).  ``extract_tile(tile_to_width(T)) == T`` for any int tile.
+
+Composition for targets wider than the native 4-bit search regime is
+defined *two-stage*: a block first tiles up to the 16x16 tile (stage 1,
+:func:`tile_mul` with ``target=4``), then the tile shift-adds to the
+target (stage 2, :func:`tile_to_width`).  This is what makes every
+composed wide table mechanically consumable by the two-level kernel —
+the kernel re-applies stage 2 on the MXU, four 16x16-tile LUT matmuls
+combined by shift-add.
+
+**Exactness identities, checked at build time.**  Composing the *exact*
+b-bit block must reproduce the *exact* target table bit-for-bit — if it
+doesn't, the chunk bookkeeping is wrong and every "approximate" result
+downstream is garbage.  The first composition at each
+``(op_kind, block_bits, target_bits)`` runs that identity
+(:func:`verify_exactness`) and caches the verdict; a failure raises
+:class:`CompositionError` immediately instead of poisoning a library.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .widths import NATIVE_BLOCK_BITS, exact_table
+
+__all__ = [
+    "CompositionError",
+    "chunk_codes",
+    "tile_mul",
+    "chain_add",
+    "tile_to_width",
+    "extract_tile",
+    "is_composed",
+    "compose_table",
+    "compose_blocks",
+    "verify_exactness",
+]
+
+
+class CompositionError(AssertionError):
+    """A composition exactness identity failed (build-time self-check)."""
+
+
+def chunk_codes(x: np.ndarray, block_bits: int, total_bits: int
+                ) -> list[np.ndarray]:
+    """Split ``total_bits``-bit codes into ``ceil(total/block)`` b-bit
+    chunks, LSB-first: ``sum_i chunks[i] << (block_bits * i) == x``."""
+    mask = (1 << block_bits) - 1
+    n = -(-total_bits // block_bits)
+    return [(x >> (block_bits * i)) & mask for i in range(n)]
+
+
+def tile_mul(base: np.ndarray, block_bits: int,
+             target_bits: int = NATIVE_BLOCK_BITS) -> np.ndarray:
+    """Compose a ``target``-bit multiplier table from a b-bit block.
+
+    ``base`` is the block's ``(2**b, 2**b)`` behaviour map.  The two
+    operand chunk lists are derived from *separate* ``a`` and ``b`` code
+    axes — they coincide for the square tables searched today, but the
+    composer must not silently rely on that symmetry.
+    """
+    side = 1 << target_bits
+    a_codes = np.arange(side)
+    b_codes = np.arange(side)
+    ai = chunk_codes(a_codes, block_bits, target_bits)
+    bj = chunk_codes(b_codes, block_bits, target_bits)
+    out = np.zeros((side, side), dtype=np.int64)
+    for i, ac in enumerate(ai):
+        for j, bc in enumerate(bj):
+            out += base[ac[:, None], bc[None, :]] << (block_bits * (i + j))
+    return out
+
+
+def chain_add(base: np.ndarray, block_bits: int,
+              target_bits: int = NATIVE_BLOCK_BITS) -> np.ndarray:
+    """Compose a ``target``-bit adder table by carry-rippling b-bit blocks.
+
+    Each chunk sum goes through the approximate adder block; the carry is
+    folded in with a second block application, and chunk results
+    concatenate.  The final carry sits one chunk above the last block.
+    """
+    mask = (1 << block_bits) - 1
+    side = 1 << target_bits
+    a_codes = np.arange(side)
+    b_codes = np.arange(side)
+    ai = chunk_codes(a_codes, block_bits, target_bits)
+    bj = chunk_codes(b_codes, block_bits, target_bits)
+    carry = np.zeros((side, side), dtype=np.int64)
+    out = np.zeros((side, side), dtype=np.int64)
+    for i, (ac, bc) in enumerate(zip(ai, bj)):
+        t = base[ac[:, None], bc[None, :]]
+        if i == 0:
+            s, carry = t & mask, t >> block_bits
+        else:
+            t2 = base[t & mask, carry]
+            s = t2 & mask
+            carry = np.minimum(1, (t >> block_bits) + (t2 >> block_bits))
+        out += s << (block_bits * i)
+    return out + (carry << (block_bits * len(ai)))
+
+
+# ---------------------------------------------------------------------------
+# two-level form: 16x16 tile <-> wide table (the kernel contract)
+# ---------------------------------------------------------------------------
+def tile_to_width(tile: np.ndarray, target_bits: int = 8) -> np.ndarray:
+    """Shift-add a ``(16, 16)`` tile over 4-bit operand chunks into the
+    ``(2**t, 2**t)`` table — the exact composition the two-level Pallas
+    kernel re-derives on the MXU."""
+    assert tile.shape == (16, 16), f"expected a 16x16 tile, got {tile.shape}"
+    assert target_bits % NATIVE_BLOCK_BITS == 0 and target_bits > 0
+    return tile_mul(np.asarray(tile, dtype=np.int64), NATIVE_BLOCK_BITS,
+                    target_bits)
+
+
+def extract_tile(lut: np.ndarray) -> np.ndarray:
+    """Exact inverse of :func:`tile_to_width` for an 8-bit composed table.
+
+    With nibble planes ``a = 16*ah + al``, the composition reads
+    ``LUT[a, b] = T[al, bl] + (T[al, bh] + T[ah, bl]) << 4 + T[ah, bh] << 8``,
+    which inverts in integer arithmetic::
+
+        T[0, 0] = LUT[0, 0] // 289                        (289 = 1+2*16+256)
+        T[x, 0] = (LUT[x, 0] - 272 * T[0, 0]) // 17       (x < 16; 272 = 16+256)
+        T[0, y] = (LUT[0, y] - 272 * T[0, 0]) // 17
+        T[x, y] =  LUT[x, y] - 16 * (T[x, 0] + T[0, y]) - 256 * T[0, 0]
+
+    Exact whenever ``lut`` really is a composed table; callers that need
+    the guarantee verify ``tile_to_width(extract_tile(lut)) == lut``
+    (:func:`is_composed`).  Written in pure array ops so the jnp twin in
+    ``repro.kernels.approx_matmul`` stays line-for-line identical.
+    """
+    assert lut.shape == (256, 256), f"expected a 256x256 table, got {lut.shape}"
+    lo = lut[:16, :16]
+    t00 = lut[0, 0] // 289
+    tx0 = (lut[:16, 0] - 272 * t00) // 17            # (16,)
+    t0y = (lut[0, :16] - 272 * t00) // 17            # (16,)
+    return lo - 16 * (tx0[:, None] + t0y[None, :]) - 256 * t00
+
+
+def is_composed(lut: np.ndarray) -> bool:
+    """Whether an 8-bit table is exactly a :func:`tile_to_width` image —
+    the precondition of the Pallas two-level path (the ref backend eats
+    arbitrary tables)."""
+    lut = np.asarray(lut, dtype=np.int64)
+    return bool(np.array_equal(tile_to_width(extract_tile(lut)), lut))
+
+
+# ---------------------------------------------------------------------------
+# build-time exactness identities
+# ---------------------------------------------------------------------------
+_VERIFIED: set[tuple[str, int, int]] = set()
+
+
+def verify_exactness(op_kind: str, block_bits: int, target_bits: int) -> None:
+    """Check (once per combination) that composing the *exact* block
+    reproduces the *exact* target table.  Raises :class:`CompositionError`
+    on any mismatch — a wrong chunk weight or carry slot must fail the
+    build, not ship a silently-wrong library."""
+    key = (op_kind, block_bits, target_bits)
+    if key in _VERIFIED:
+        return
+    exact_block = exact_table(op_kind, block_bits)
+    got = compose_table(exact_block, op_kind, block_bits, target_bits,
+                        _verify=False)
+    want = exact_table(op_kind, target_bits)
+    if not np.array_equal(got, want):
+        bad = int(np.abs(got - want).max())
+        raise CompositionError(
+            f"exactness identity failed for {op_kind} {block_bits}b -> "
+            f"{target_bits}b: exact blocks composed with max deviation {bad}"
+        )
+    if op_kind == "mul" and target_bits > NATIVE_BLOCK_BITS:
+        # the kernel contract: composed tables must invert to their tile
+        tile = (exact_block if block_bits == NATIVE_BLOCK_BITS
+                else tile_mul(exact_block, block_bits))
+        if not np.array_equal(extract_tile(got), tile):
+            raise CompositionError(
+                f"tile round-trip failed for mul {block_bits}b -> "
+                f"{target_bits}b (extract_tile is not inverting tile_to_width)"
+            )
+    _VERIFIED.add(key)
+
+
+def compose_table(base: np.ndarray, op_kind: str, block_bits: int,
+                  target_bits: int, *, _verify: bool = True) -> np.ndarray:
+    """One b-bit block's behaviour map -> the target-width table.
+
+    Multipliers wider than the native block width go through the
+    two-stage (tile, then shift-add) form so the result is always
+    kernel-consumable; adders carry-chain directly at the target width.
+    """
+    base = np.asarray(base, dtype=np.int64)
+    assert base.shape == (1 << block_bits, 1 << block_bits), (
+        f"block table shape {base.shape} does not match {block_bits}-bit codes"
+    )
+    if _verify:
+        verify_exactness(op_kind, block_bits, target_bits)
+    if op_kind == "adder":
+        if block_bits == target_bits:
+            return base.copy()
+        return chain_add(base, block_bits, target_bits)
+    if op_kind != "mul":
+        raise ValueError(f"unknown op_kind {op_kind!r}")
+    if block_bits == target_bits:
+        return base.copy()
+    tile = (base if block_bits == NATIVE_BLOCK_BITS
+            else tile_mul(base, block_bits, min(target_bits,
+                                                NATIVE_BLOCK_BITS)))
+    if target_bits <= NATIVE_BLOCK_BITS:
+        return tile
+    return tile_to_width(tile, target_bits)
+
+
+def compose_blocks(block_bits: int, target_bits: int) -> int:
+    """How many block instances the composed operator spends — the area
+    model of composition (adder glue between partial products is ignored;
+    the planner documents this as a lower bound).
+
+    Two-stage for wide multipliers: ``ceil(4/b)**2`` blocks per 16x16
+    tile, ``(target/4)**2`` tiles.
+    """
+    if target_bits <= NATIVE_BLOCK_BITS:
+        n = -(-target_bits // block_bits)
+        return n * n
+    per_tile = (-(-NATIVE_BLOCK_BITS // block_bits)) ** 2
+    n_tiles = (target_bits // NATIVE_BLOCK_BITS) ** 2
+    return per_tile * n_tiles

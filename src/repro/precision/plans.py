@@ -1,0 +1,122 @@
+"""Per-width planning: which width a model serves at, and the plan
+ladders the serving runtime walks at that width.
+
+:mod:`repro.library.qos` is deliberately width-agnostic — it sees
+operators as ``(record, compiled table)`` pairs with areas and error
+metrics.  What makes a plan *4-bit* or *8-bit* is which frontier those
+pairs came from and which exact reference anchors the area accounting.
+This module owns that choice:
+
+* :func:`select_width` — the model-config side: a config built with
+  ``.with_approx_mlp(bits=8)`` serves W8A8, default stays W4A4.
+* :func:`load_frontier` — the library side: the width-compiled frontier
+  triple ``(compiled, exact_area, bits)`` (thin, explicit wrapper over
+  :func:`repro.library.compile.load_mul_frontier`).
+* :class:`WidthFrontier` + :func:`build_ladder` — one loaded width held
+  together with its plan-ladder construction, so launchers ask for "an
+  8-bit ladder over this store" in one call.
+
+Layering: this module sits *above* :mod:`repro.library` (it imports
+compile/qos) and *below* :mod:`repro.serving` (the serving controller
+consumes the plans built here).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .widths import NATIVE_BLOCK_BITS, WidthSpec, get_width
+
+__all__ = [
+    "DEFAULT_WIDTH_BITS",
+    "select_width",
+    "load_frontier",
+    "WidthFrontier",
+    "build_ladder",
+]
+
+DEFAULT_WIDTH_BITS = NATIVE_BLOCK_BITS
+
+
+def select_width(cfg=None, requested: int | None = None) -> WidthSpec:
+    """Resolve the serving width: an explicit request wins, else the
+    model config's ``approx_bits``, else the native 4-bit default.
+
+    A mismatch between the two (config says 8, caller asks 4) raises —
+    a quantized checkpoint's width is not a runtime preference.  A config
+    that has not opted into LUT routing yet (``approx_mlp=False``) pins
+    nothing: its ``approx_bits`` default is not a commitment.
+    """
+    cfg_bits = None
+    if cfg is not None and getattr(cfg, "approx_mlp", False):
+        cfg_bits = getattr(cfg, "approx_bits", None)
+    if requested is not None and cfg_bits is not None \
+            and int(requested) != int(cfg_bits):
+        raise ValueError(
+            f"requested width {requested} contradicts the model config's "
+            f"approx_bits={cfg_bits}"
+        )
+    bits = requested if requested is not None else (cfg_bits or
+                                                    DEFAULT_WIDTH_BITS)
+    return get_width(int(bits))
+
+
+def load_frontier(library, width: WidthSpec | int):
+    """The width-compiled multiplier frontier of a store:
+    ``(compiled, exact_area, bits)``, areas and error metrics both at the
+    target width (composed, for widths above the native block width)."""
+    from ..library.compile import load_mul_frontier
+
+    w = width if isinstance(width, WidthSpec) else get_width(width)
+    if w.bits == NATIVE_BLOCK_BITS:
+        # native regime: keep the legacy loader semantics (block frontier)
+        return load_mul_frontier(library)
+    return load_mul_frontier(library, target_bits=w.bits)
+
+
+@dataclass
+class WidthFrontier:
+    """One store's frontier, pinned to one serving width."""
+
+    width: WidthSpec
+    compiled: list            # [(OperatorRecord, CompiledLut)]
+    exact_area: float
+    library: str | None = None
+    meta: dict = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, library, width: WidthSpec | int) -> "WidthFrontier":
+        w = width if isinstance(width, WidthSpec) else get_width(width)
+        compiled, exact_area, bits = load_frontier(library, w)
+        return cls(width=w, compiled=compiled, exact_area=float(exact_area),
+                   library=str(library), meta={"frontier_bits": bits})
+
+    def __len__(self) -> int:
+        return len(self.compiled)
+
+    def select_plan(self, sensitivities, budget: float):
+        from ..library.qos import select_plan
+
+        return select_plan(self.compiled, sensitivities, budget,
+                           exact_area=self.exact_area)
+
+    def ladder(self, n_layers: int, *, sensitivities=None, levels: int = 6):
+        return build_ladder(self.compiled, n_layers,
+                            exact_area=self.exact_area,
+                            sensitivities=sensitivities, levels=levels)
+
+
+def build_ladder(compiled, n_layers: int, *, exact_area: float,
+                 sensitivities=None, levels: int = 6):
+    """A serving :class:`~repro.serving.controller.PlanLadder` over one
+    width's frontier — every level's LUT stack shares the frontier's
+    table side, so controller moves and watcher refreshes stay
+    swap-compatible (``validate_lut_stack``)."""
+    from ..serving.controller import PlanLadder
+
+    sens = (np.ones(n_layers) if sensitivities is None
+            else np.asarray(sensitivities, dtype=np.float64))
+    return PlanLadder.build(compiled, n_layers, exact_area=exact_area,
+                            sensitivities=sens, levels=levels)

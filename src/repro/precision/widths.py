@@ -1,0 +1,172 @@
+"""Width registry: operator bit-width as a first-class pipeline axis.
+
+Every layer of the stack — compile, kernels, quantization, QoS, serving —
+used to hard-code the 4-bit regime (codes in ``[0, 16)``, ``(16, 16)``
+LUTs, bias 8).  A :class:`WidthSpec` names all of those facts once, and
+the registry below is the single source the other layers read them from:
+
+* ``side`` / ``lut_shape``: the code range and behaviour-table shape the
+  LUT kernels consume;
+* ``bias`` / ``qmax``: the biased-unsigned signed-code decomposition
+  :func:`repro.quant.int4.quantize_intb` uses (``x ≈ (code - bias) * s``);
+* ``accum_dtype`` / ``max_k``: the accumulator contract of the Pallas
+  kernels — ``max_k`` is the largest contraction depth for which integer
+  accumulation provably cannot overflow (table entries are bounded by
+  ``max_entry``);
+* ``tile_chunks``: how many 4-bit tile applications the two-level kernel
+  form needs per output element (1 for the native 16x16 path).
+
+The 8-bit regime is the edge-deployment workload (W8A8): its 256x256
+tables are *composed* from searched 1–4-bit blocks by
+:mod:`repro.precision.compose`, never searched directly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "WidthSpec",
+    "WIDTHS",
+    "SUPPORTED_WIDTHS",
+    "get_width",
+    "width_from_side",
+    "width_from_lut",
+    "width_from_stack",
+    "exact_table",
+    "stack_shape",
+]
+
+# the widest operand the template searches cover; wider targets compose
+NATIVE_BLOCK_BITS = 4
+
+
+@dataclass(frozen=True)
+class WidthSpec:
+    """Everything width-dependent about one operand bit-width."""
+
+    bits: int                 # operand width (codes are `bits`-bit unsigned)
+
+    @property
+    def side(self) -> int:
+        """Code range: codes live in ``[0, side)``."""
+        return 1 << self.bits
+
+    @property
+    def lut_shape(self) -> tuple[int, int]:
+        """Behaviour-table shape the kernels and plans carry."""
+        return (self.side, self.side)
+
+    @property
+    def bias(self) -> int:
+        """Signed-code bias: ``x ≈ (code - bias) * scale``."""
+        return 1 << (self.bits - 1)
+
+    @property
+    def qmax(self) -> int:
+        """Largest quantized magnitude (symmetric range, code 0 unused)."""
+        return self.bias - 1
+
+    @property
+    def max_entry(self) -> int:
+        """Upper bound on an exact product-table entry."""
+        top = self.side - 1
+        return top * top
+
+    @property
+    def accum_dtype(self) -> np.dtype:
+        return np.dtype(np.int32)
+
+    @property
+    def max_k(self) -> int:
+        """Largest contraction depth with overflow-free int32 accumulation.
+
+        The two-level 8-bit kernel accumulates ``tile_entry * shift_sum``
+        per k (shift weights sum to 289 = 1 + 2*16 + 256), the 4-bit path
+        a single table entry; both are bounded by ``max_entry``-ish terms,
+        so ``(2**31 - 1) // bound`` is the provable depth.
+        """
+        if self.bits <= NATIVE_BLOCK_BITS:
+            bound = 255          # any 8-output-bit netlist entry
+        else:
+            bound = 255 * 289    # worst tile entry through the shift-add
+        return (2**31 - 1) // bound
+
+    @property
+    def tile_chunks(self) -> int:
+        """4-bit tile applications per LUT lookup in the kernel form."""
+        n = -(-self.bits // NATIVE_BLOCK_BITS)
+        return n * n
+
+    def stack_shape(self, n_layers: int) -> tuple[int, int, int]:
+        """Shape of a per-layer LUT stack at this width."""
+        return (n_layers, self.side, self.side)
+
+    @property
+    def benchmark_name(self) -> str:
+        """The exact reference circuit for this width's multiplier."""
+        return f"mul_i{2 * self.bits}"
+
+
+# supported *target* widths.  4 is the native searched regime; 8 is the
+# composed W8A8 regime.  (Sub-4-bit blocks are library signatures, not
+# pipeline targets — they always compose up to one of these.)
+WIDTHS: dict[int, WidthSpec] = {4: WidthSpec(4), 8: WidthSpec(8)}
+SUPPORTED_WIDTHS: tuple[int, ...] = tuple(sorted(WIDTHS))
+
+
+def get_width(bits: int) -> WidthSpec:
+    try:
+        return WIDTHS[int(bits)]
+    except KeyError:
+        raise KeyError(
+            f"unsupported target width {bits}; supported: {SUPPORTED_WIDTHS}"
+        ) from None
+
+
+def width_from_side(side: int) -> WidthSpec:
+    """Width spec from a LUT side length (16 -> 4-bit, 256 -> 8-bit)."""
+    bits = int(side).bit_length() - 1
+    if (1 << bits) != side:
+        raise ValueError(f"LUT side {side} is not a power of two")
+    return get_width(bits)
+
+
+def width_from_lut(lut) -> WidthSpec:
+    """Infer the operating width from a behaviour table's shape.
+
+    Works on numpy arrays, jax arrays and tracers alike — shapes are
+    static under jit, so width dispatch never breaks tracing.
+    """
+    if lut.ndim < 2 or lut.shape[-1] != lut.shape[-2]:
+        raise ValueError(f"not a square LUT: shape {tuple(lut.shape)}")
+    return width_from_side(lut.shape[-1])
+
+
+def width_from_stack(stack) -> WidthSpec:
+    """Infer the width of a per-layer ``(L, side, side)`` LUT stack."""
+    if stack.ndim != 3:
+        raise ValueError(
+            f"expected a (L, side, side) stack, got shape {tuple(stack.shape)}"
+        )
+    return width_from_lut(stack)
+
+
+def exact_table(op_kind: str, bits: int) -> np.ndarray:
+    """Exact ``(2**bits, 2**bits)`` reference semantics at any width.
+
+    The width-generic successor of ``repro.library.compile.exact_lut16``
+    (which now delegates here with ``bits=4``).
+    """
+    a = np.arange(1 << bits, dtype=np.int64)
+    if op_kind == "mul":
+        return a[:, None] * a[None, :]
+    if op_kind == "adder":
+        return a[:, None] + a[None, :]
+    raise ValueError(f"unknown op_kind {op_kind!r}")
+
+
+def stack_shape(bits: int, n_layers: int) -> tuple[int, int, int]:
+    return get_width(bits).stack_shape(n_layers)

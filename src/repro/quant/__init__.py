@@ -1,4 +1,11 @@
 from .lut import build_lut, exact_mul_lut
-from .int4 import quantize_int4, approx_linear, dequantize
+from .int4 import approx_linear, dequantize, quantize_int4, quantize_intb
 
-__all__ = ["build_lut", "exact_mul_lut", "quantize_int4", "approx_linear", "dequantize"]
+__all__ = [
+    "build_lut",
+    "exact_mul_lut",
+    "quantize_int4",
+    "quantize_intb",
+    "approx_linear",
+    "dequantize",
+]

@@ -1,8 +1,9 @@
 """Adaptive serving engine: request queue + batched greedy decode with
 between-batch operator hot-swap.
 
-The load-bearing design point: the per-layer ``(L, 16, 16)`` LUT stack is
-a *plain jitted argument* of the decode step, never a closed-over
+The load-bearing design point: the per-layer ``(L, side, side)`` LUT
+stack — ``(L, 16, 16)`` for W4A4, ``(L, 256, 256)`` for composed W8A8 —
+is a *plain jitted argument* of the decode step, never a closed-over
 constant.  Swapping QoS plans between batches therefore re-stacks a tiny
 int32 array and changes nothing the compiler specialized on — the decode
 step is traced exactly once for the whole serve, across every controller
@@ -109,11 +110,15 @@ class ServingEngine:
                 "config with .with_approx_mlp()"
             )
             self._luts = jnp.asarray(stack_luts(plan, self._compiled))
-            from ..library.compile import exact_lut16
+            from ..precision.widths import exact_table, width_from_stack
 
+            # the exact shadow stack shares the live stack's width — a
+            # W8A8 serve shadows against the exact 256x256 product table
+            self.width = width_from_stack(self._luts)
+            side = self.width.side
             self._exact_luts = jnp.asarray(np.broadcast_to(
-                exact_lut16("mul").astype(np.int32),
-                (cfg.n_layers, 16, 16)).copy())
+                exact_table("mul", self.width.bits).astype(np.int32),
+                (cfg.n_layers, side, side)).copy())
 
             def step_fn(params, caches, tok, pos, luts):
                 # python side effect runs once per *trace*, so this counts
@@ -124,6 +129,7 @@ class ServingEngine:
         else:
             self._luts = None
             self._exact_luts = None
+            self.width = None
 
             def step_fn(params, caches, tok, pos):
                 self._trace_count += 1

@@ -27,9 +27,14 @@ __all__ = ["LibraryWatcher"]
 
 class LibraryWatcher:
     def __init__(self, library, *, min_poll_s: float = 2.0,
+                 target_bits: int | None = None,
                  clock: Callable[[], float] = time.monotonic) -> None:
         self.library = library
         self.store = OperatorStore(library)
+        # the serving width is sticky across refreshes: a W8A8 serve must
+        # reload the *8-bit composed* frontier, or every refresh would be
+        # refused by the stack validator (16x16 vs 256x256)
+        self.target_bits = target_bits
         self.min_poll_s = float(min_poll_s)
         self._clock = clock
         self._token = self.store.version_token()
@@ -55,10 +60,11 @@ class LibraryWatcher:
 
     def load_frontier(self):
         """(compiled frontier, exact_area, bits) of the refreshed store —
-        the triple every plan-refresh path consumes.  Raises
-        :class:`LookupError` if the store lost its multipliers (the caller
-        keeps serving on the old plan)."""
+        the triple every plan-refresh path consumes, compiled at the
+        watcher's serving width.  Raises :class:`LookupError` if the
+        store lost its multipliers (the caller keeps serving on the old
+        plan)."""
         from ..library.compile import load_mul_frontier
 
         self.refreshes += 1
-        return load_mul_frontier(self.library)
+        return load_mul_frontier(self.library, target_bits=self.target_bits)

@@ -1,0 +1,405 @@
+"""Multi-bit-width pipeline: composition exactness identities, the
+two-level 8-bit kernel vs its oracle, width-generic quantization, the
+width-compiled frontier, and the metric-aware error pipeline."""
+
+import numpy as np
+import pytest
+
+from repro.core.arith import benchmark
+from repro.core.circuits import Circuit, Op
+from repro.core.miter import ERROR_METRICS, measure_error
+from repro.core.synth import area
+from repro.library import OperatorSignature, OperatorStore
+from repro.library.compile import compile_circuit, compile_record, \
+    load_mul_frontier
+from repro.library.qos import select_plan, stack_luts, validate_lut_stack
+from repro.precision import compose
+from repro.precision.widths import (
+    NATIVE_BLOCK_BITS,
+    exact_table,
+    get_width,
+    width_from_lut,
+    width_from_side,
+    width_from_stack,
+)
+
+
+# ---------------------------------------------------------------------------
+# handcrafted blocks (deterministic, no search needed)
+# ---------------------------------------------------------------------------
+def trunc_mul2() -> Circuit:
+    """Exact low 2 product bits, upper bits dropped (wce 8)."""
+    c = Circuit.empty(4, "trunc_mul2")
+    a0, a1, b0, b1 = 0, 1, 2, 3
+    p0 = c.add(Op.AND, a0, b0)
+    p1 = c.add(Op.XOR, c.add(Op.AND, a1, b0), c.add(Op.AND, a0, b1))
+    z = c.const(False)
+    for out in (p0, p1, z, z):
+        c.mark_output(out)
+    return c
+
+
+def _fill(root, circuits, bits=2) -> OperatorStore:
+    store = OperatorStore(root)
+    exact_vals = benchmark(f"mul_i{2 * bits}").eval_words().astype(np.int64)
+    for circ in circuits:
+        wce = int(np.abs(circ.eval_words().astype(np.int64)
+                         - exact_vals).max())
+        store.put_circuit(circ, OperatorSignature("mul", bits, "wce",
+                                                  max(wce, 1)),
+                          area=area(circ))
+    return store
+
+
+# ---------------------------------------------------------------------------
+# widths registry
+# ---------------------------------------------------------------------------
+def test_width_registry_facts():
+    w4, w8 = get_width(4), get_width(8)
+    assert (w4.side, w4.bias, w4.qmax) == (16, 8, 7)
+    assert (w8.side, w8.bias, w8.qmax) == (256, 128, 127)
+    assert w4.lut_shape == (16, 16) and w8.lut_shape == (256, 256)
+    assert w8.stack_shape(3) == (3, 256, 256)
+    assert w4.tile_chunks == 1 and w8.tile_chunks == 4
+    assert w4.max_k > w8.max_k > 0
+    with pytest.raises(KeyError, match="unsupported"):
+        get_width(6)
+
+
+def test_width_inference_from_shapes():
+    assert width_from_side(256).bits == 8
+    assert width_from_lut(np.zeros((16, 16))).bits == 4
+    assert width_from_stack(np.zeros((5, 256, 256))).bits == 8
+    with pytest.raises(ValueError, match="power of two"):
+        width_from_side(17)
+    with pytest.raises(ValueError, match="square"):
+        width_from_lut(np.zeros((16, 8)))
+    with pytest.raises(ValueError, match="stack"):
+        width_from_stack(np.zeros((16, 16)))
+
+
+# ---------------------------------------------------------------------------
+# composition exactness identities (the satellite's b ∈ {1, 2, 4}, plus 3)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("block_bits", [1, 2, 3, 4])
+@pytest.mark.parametrize("op_kind", ["mul", "adder"])
+def test_exact_blocks_compose_to_exact_8bit_tables(op_kind, block_bits):
+    got = compose.compose_table(exact_table(op_kind, block_bits), op_kind,
+                                block_bits, 8)
+    np.testing.assert_array_equal(got, exact_table(op_kind, 8))
+
+
+def test_tile_roundtrip_and_is_composed(rng):
+    tile = rng.integers(0, 256, (16, 16)).astype(np.int64)
+    lut8 = compose.tile_to_width(tile)
+    np.testing.assert_array_equal(compose.extract_tile(lut8), tile)
+    assert compose.is_composed(lut8)
+    assert not compose.is_composed(lut8 + np.eye(256, dtype=np.int64))
+
+
+def test_composed_8bit_error_amplification_is_bounded():
+    """A block's wce amplifies through the shift-add by at most the sum of
+    the chunk weights (25x to the tile, 289x tile to table)."""
+    base = compose.extract_tile(np.zeros((256, 256), dtype=np.int64))
+    del base  # (just exercising the zero path above)
+    comp = compile_circuit(trunc_mul2(), "mul", 2, target_bits=8)
+    block_wce = 8   # trunc_mul2
+    assert 0 < comp.wce16 <= block_wce * 25 * 289
+    assert comp.target_bits == 8 and comp.lut.shape == (256, 256)
+    assert comp.tile is not None and comp.tile.shape == (16, 16)
+    # the stored tile really generates the stored table
+    np.testing.assert_array_equal(
+        compose.tile_to_width(comp.tile.astype(np.int64)), comp.lut)
+
+
+def test_compose_blocks_counts():
+    assert compose.compose_blocks(4, 8) == 4
+    assert compose.compose_blocks(2, 8) == 16
+    assert compose.compose_blocks(1, 8) == 64
+    assert compose.compose_blocks(2, 4) == 4
+    assert compose.compose_blocks(4, 4) == 1
+
+
+def test_composition_guards():
+    """A block table whose shape contradicts its claimed width fails
+    loudly, unknown op kinds are rejected, and the identity guard runs
+    (and caches) for every composition path used."""
+    with pytest.raises(AssertionError, match="does not match"):
+        compose.compose_table(np.zeros((4, 4)), "mul", 3, 8)
+    with pytest.raises(ValueError, match="op_kind"):
+        compose.compose_table(np.zeros((4, 4)), "div", 2, 4)
+    compose.verify_exactness("mul", 2, 8)    # idempotent, must not raise
+    assert issubclass(compose.CompositionError, AssertionError)
+
+
+# ---------------------------------------------------------------------------
+# the 8-bit kernel vs the oracle (bit-exact, incl. K-padding edges)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,K,N", [
+    (8, 16, 8),
+    (5, 3, 7),          # K far below the block: heavy padding
+    (37, 257, 29),      # K one over a block boundary
+    (130, 128, 64),     # exact K-block fit
+])
+def test_w8_pallas_matches_oracle(M, K, N, rng):
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels import ref
+    from repro.kernels.approx_matmul import approx_matmul_pallas
+
+    tile = rng.integers(0, 256, (16, 16)).astype(np.int64)
+    assert tile[0, 0] != 0 or True  # padding correction must survive any T00
+    lut8 = compose.tile_to_width(tile).astype(np.int32)
+    a = rng.integers(0, 256, (M, K)).astype(np.int32)
+    b = rng.integers(0, 256, (K, N)).astype(np.int32)
+    want = lut8[a[:, :, None], b[None, :, :]].sum(axis=1)
+    got_ref = np.asarray(ref.approx_matmul(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut8)))
+    got_tl = np.asarray(ref.approx_matmul_two_level(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(tile.astype(np.int32))))
+    got_pal = np.asarray(approx_matmul_pallas(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut8), interpret=True))
+    np.testing.assert_array_equal(got_ref, want)
+    np.testing.assert_array_equal(got_tl, want)
+    np.testing.assert_array_equal(got_pal, want)
+
+
+def test_pallas_rejects_unknown_lut_side(rng):
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels.approx_matmul import approx_matmul_pallas
+
+    a = jnp.zeros((4, 4), jnp.int32)
+    with pytest.raises(ValueError, match="LUT side"):
+        approx_matmul_pallas(a, a, jnp.zeros((32, 32), jnp.int32),
+                             interpret=True)
+
+
+def test_w8_pallas_rejects_inexact_block_k(rng):
+    """block_k beyond the f32-exact shift-add bound (255*bk*289 < 2^24)
+    must raise instead of silently rounding."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels.approx_matmul import approx_matmul_pallas
+
+    lut8 = jnp.asarray(exact_table("mul", 8).astype(np.int32))
+    a = jnp.zeros((8, 256), jnp.int32)
+    b = jnp.zeros((256, 8), jnp.int32)
+    with pytest.raises(ValueError, match="f32-exact"):
+        approx_matmul_pallas(a, b, lut8, block_k=256, interpret=True)
+    # the largest exact block size still bit-matches
+    max_bk = (1 << 24) // (255 * 289)
+    aa = rng.integers(0, 256, (8, 300)).astype(np.int32)
+    bb = rng.integers(0, 256, (300, 8)).astype(np.int32)
+    lut = exact_table("mul", 8).astype(np.int32)
+    want = lut[aa[:, :, None], bb[None, :, :]].sum(axis=1)
+    got = np.asarray(approx_matmul_pallas(
+        jnp.asarray(aa), jnp.asarray(bb), jnp.asarray(lut),
+        block_k=max_bk, interpret=True))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_w8_exact_table_reproduces_int_matmul(rng):
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels import ops
+
+    lut8 = exact_table("mul", 8).astype(np.int32)
+    assert compose.is_composed(lut8)
+    a = rng.integers(0, 256, (9, 33)).astype(np.int32)
+    b = rng.integers(0, 256, (33, 6)).astype(np.int32)
+    out = np.asarray(ops.approx_matmul(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray(lut8), backend="ref"))
+    np.testing.assert_array_equal(out, a.astype(np.int64) @ b)
+
+
+# ---------------------------------------------------------------------------
+# width-generic quantization + signed decomposition
+# ---------------------------------------------------------------------------
+def test_quantize_intb_codes_and_scale(rng):
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.quant import quantize_int4, quantize_intb
+
+    x = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+    for bits in (4, 8):
+        w = get_width(bits)
+        q, s = quantize_intb(x, bits, axis=-1)
+        qn = np.asarray(q)
+        assert qn.min() >= 1 and qn.max() <= w.side - 1  # code 0 unused
+        back = (qn - w.bias) * np.asarray(s)
+        assert np.abs(back - np.asarray(x)).max() <= np.asarray(s).max()
+    q4, s4 = quantize_int4(x)
+    q4b, s4b = quantize_intb(x, 4)
+    np.testing.assert_array_equal(np.asarray(q4), np.asarray(q4b))
+    np.testing.assert_array_equal(np.asarray(s4), np.asarray(s4b))
+
+
+def test_approx_linear_w8_signed_decomposition(rng):
+    """Signed int8 x int8 through the unsigned composed multiplier + exact
+    correction equals the plain quantized matmul when the table is exact."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.quant import approx_linear, quantize_intb
+
+    x = rng.standard_normal((5, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 7)).astype(np.float32)
+    lut8 = jnp.asarray(exact_table("mul", 8).astype(np.int32))
+    got = np.asarray(approx_linear(jnp.asarray(x), jnp.asarray(w), lut8,
+                                   backend="ref"))
+    xq, sx = quantize_intb(jnp.asarray(x), 8, axis=-1)
+    wq, sw = quantize_intb(jnp.asarray(w), 8, axis=0)
+    want = (((np.asarray(xq) - 128.0) @ (np.asarray(wq) - 128.0))
+            * np.asarray(sx) * np.asarray(sw))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# width-compiled frontier -> plan -> stack
+# ---------------------------------------------------------------------------
+def test_compile_cache_keys_per_target_width(tmp_path):
+    store = _fill(tmp_path / "lib", [trunc_mul2()])
+    rec = store.query("mul", 2)[0]
+    c4 = compile_record(rec)
+    c8 = compile_record(rec, target_bits=8)
+    assert c4 is not c8
+    assert c4.lut.shape == (16, 16) and c8.lut.shape == (256, 256)
+    assert compile_record(rec, target_bits=8) is c8   # cache hit per width
+
+
+def test_load_mul_frontier_target8_scales_areas(tmp_path):
+    lib = tmp_path / "lib"
+    _fill(lib, [benchmark("mul_i4"), trunc_mul2()], bits=2)
+    _fill(lib, [benchmark("mul_i8")], bits=4)
+
+    legacy, legacy_exact, legacy_bits = load_mul_frontier(lib)
+    assert legacy_bits == 4            # widest stored block wins
+    assert all(c.target_bits == 4 for _, c in legacy)
+
+    compiled, exact_area, bits = load_mul_frontier(lib, target_bits=8)
+    assert bits == 8
+    assert exact_area == area(benchmark("mul_i16"))
+    assert all(c.lut.shape == (256, 256) for _, c in compiled)
+    # every frontier record's area is the block area times its block count
+    store = OperatorStore(lib)
+    orig = {r.key: r for r in store.query("mul")}
+    for rec, comp in compiled:
+        blocks = compose.compose_blocks(rec.signature.bits, 8)
+        assert rec.area == pytest.approx(orig[rec.key].area * blocks)
+    # some exact block survives on the frontier, composing to the exact
+    # 8-bit table (which block wins is an area contest: 16 exact 2-bit
+    # blocks may legitimately undercut 4 exact 4-bit ones)
+    exacts = [c for _, c in compiled if c.wce16 == 0]
+    assert exacts and np.array_equal(exacts[0].lut, exact_table("mul", 8))
+
+
+def test_w8_plan_stack_and_validation(tmp_path):
+    lib = tmp_path / "lib"
+    _fill(lib, [benchmark("mul_i4"), trunc_mul2()], bits=2)
+    compiled, exact_area, _ = load_mul_frontier(lib, target_bits=8)
+    plan = select_plan(compiled, np.ones(3), budget=1e12,
+                       exact_area=exact_area)
+    stack = stack_luts(plan, compiled)
+    assert stack.shape == (3, 256, 256) and stack.dtype == np.int32
+    # a width move is refused with a width-labelled error
+    with pytest.raises(ValueError, match="8-bit"):
+        validate_lut_stack(stack, np.zeros((3, 16, 16), np.int32))
+
+
+def test_stack_luts_rejects_mixed_width_frontier(tmp_path):
+    store = _fill(tmp_path / "lib", [trunc_mul2()])
+    rec = store.query("mul", 2)[0]
+    mixed = [(rec, compile_record(rec)),
+             (rec, compile_record(rec, target_bits=8))]
+    plan = select_plan([(rec, compile_record(rec))], np.ones(2), 1e12,
+                       exact_area=10.0)
+    with pytest.raises(ValueError, match="single-width"):
+        stack_luts(plan, mixed)
+
+
+def test_select_width_from_model_config():
+    from repro.configs import get_config
+    from repro.precision.plans import select_width
+
+    cfg = get_config("gemma3-1b", reduced=True)
+    assert select_width(cfg).bits == NATIVE_BLOCK_BITS     # no opt-in yet
+    assert select_width(cfg, requested=8).bits == 8
+    cfg8 = cfg.with_approx_mlp(bits=8)
+    assert cfg8.approx_mlp and cfg8.approx_bits == 8
+    assert select_width(cfg8).bits == 8
+    with pytest.raises(ValueError, match="contradicts"):
+        select_width(cfg8, requested=4)
+
+
+# ---------------------------------------------------------------------------
+# richer error metrics: one measurement, three bounds
+# ---------------------------------------------------------------------------
+def test_measure_error_stats_consistency():
+    stats = measure_error(trunc_mul2(), benchmark("mul_i4").eval_words())
+    assert set(ERROR_METRICS) == {"wce", "mae", "mse"}
+    assert stats.wce == 8
+    assert 0 < stats.mae <= stats.wce
+    assert stats.mae**2 <= stats.mse <= stats.wce**2
+    assert stats.value("mse") == stats.mse
+    with pytest.raises(KeyError):
+        stats.value("nope")
+
+
+def test_store_validates_signature_metric(tmp_path):
+    store = OperatorStore(tmp_path / "lib")
+    circ = trunc_mul2()             # wce 8, mae ~1.3, mse ~10.4
+    stats = measure_error(circ, benchmark("mul_i4").eval_words())
+    rec = store.put_circuit(circ, OperatorSignature("mul", 2, "mae", 2),
+                            area=3.0)
+    assert rec.mse == pytest.approx(stats.mse)
+    back = store.records(OperatorSignature("mul", 2, "mae", 2))[0]
+    assert back.mse == pytest.approx(stats.mse)
+    # wce 8 > mae-threshold 2 is fine (mae is bounded), but a tight mae
+    # signature must reject it
+    with pytest.raises(ValueError, match="mae"):
+        store.put_circuit(circ, OperatorSignature("mul", 2, "mae", 1),
+                          area=3.0)
+    with pytest.raises(ValueError, match="mse"):
+        store.put_circuit(circ, OperatorSignature("mul", 2, "mse", 5),
+                          area=3.0)
+
+
+def test_signature_rejects_fractional_threshold():
+    """Fractional mae/mse thresholds would not round-trip through the
+    signature dirname ('mae0.5' parses as metric 'mae0.') — refuse at
+    construction instead of corrupting the store."""
+    with pytest.raises(ValueError, match="positive integer"):
+        OperatorSignature("mul", 2, "mae", 0.5)
+    with pytest.raises(ValueError, match="digits"):
+        OperatorSignature("mul", 2, "mae0.", 5)
+    sig = OperatorSignature("mul", 2, "mae", 2.0)   # whole floats normalize
+    assert sig.threshold == 2 and isinstance(sig.threshold, int)
+    assert OperatorSignature.from_dirname(sig.dirname) == sig
+
+
+def test_smoke_sweep_plans_the_mae_job():
+    from repro.fleet.plan import SWEEPS, plan_jobs
+
+    jobs = plan_jobs(SWEEPS["smoke"])
+    mae_jobs = [j for j in jobs if j.error_metric == "mae"]
+    assert len(mae_jobs) == 1
+    j = mae_jobs[0]
+    assert (j.benchmark, j.bits, j.engine) == ("mul", 2, "anneal")
+    # metric participates in the job identity and the seed derivation
+    twin = [x for x in jobs if (x.benchmark, x.bits, x.et, x.engine)
+            == (j.benchmark, j.bits, j.et, j.engine)
+            and x.error_metric == "wce"]
+    if twin:
+        assert twin[0].key() != j.key() and twin[0].seed != j.seed
+
+
+def test_engines_reject_unboundable_metric():
+    from repro.core.engine import SearchJob, get_engine
+
+    job = SearchJob("mul", 2, 2, "tensor", error_metric="mse")
+    with pytest.raises(ValueError, match="anneal"):
+        get_engine("tensor").run(job)
+
+
+def test_8bit_sweep_preset_plans():
+    from repro.fleet.plan import SWEEPS, plan_jobs
+
+    jobs = plan_jobs(SWEEPS["8bit"])
+    assert {j.bits for j in jobs} == {2, 4}
+    assert {j.benchmark for j in jobs} == {"mul"}
+    assert {j.engine for j in jobs} == {"anneal", "tensor", "muscat",
+                                        "mecals"}
