@@ -9,10 +9,12 @@ Two modes:
 * **library + QoS** (``--library <dir> [--qos-budget B]``): load the
   Pareto frontier of operators a previous search persisted (``python -m
   repro.core.search --library <dir>``), compile each to the packed LUT the
-  Pallas kernel consumes, *measure per-layer sensitivity*, and let the QoS
-  selector assign each layer the smallest operator that keeps predicted
-  drift within budget — then run the model on the resulting per-layer plan
-  and report what each layer used (repro.launch.analysis.plan_report).
+  Pallas kernel consumes, *measure per-layer sensitivity* through
+  ``repro.sensitivity.profile`` (the same measured code path the serve
+  launcher's ``--profile`` consumes), and let the QoS selector assign each
+  layer the smallest operator that keeps predicted drift within budget —
+  then run the model on the resulting per-layer plan and report what each
+  layer used (repro.launch.analysis.plan_report).
 
     PYTHONPATH=src python examples/approx_inference.py --reduced \
         --library runs/lib --qos-budget 0.02
@@ -75,10 +77,9 @@ def adhoc_main(args) -> None:
 def library_main(args) -> None:
     """Frontier-driven per-layer QoS selection from a persisted library."""
     from repro.launch.analysis import plan_report
-    from repro.library import (
-        load_mul_frontier, measure_layer_costs, select_plan, stack_luts,
-    )
+    from repro.library import load_mul_frontier, select_plan, stack_luts
     from repro.library.compile import compile_cache_stats
+    from repro.sensitivity.profile import measure_cost_matrix
 
     try:
         compiled, exact_area, bits = load_mul_frontier(args.library)
@@ -97,19 +98,14 @@ def library_main(args) -> None:
     base_top1 = jnp.argmax(base, -1)
     L = cfg.n_layers
 
-    # per-(layer, operator) drift, measured one probe at a time: biased LUT
-    # errors make drift non-linear in mae16, so the QoS plan runs on
-    # measured costs rather than the linear sensitivity model
-    exact16 = np.asarray(exact_mul_lut(), dtype=np.int32)
-
-    def eval_drift(per_layer):
-        stack = np.stack([exact16 if l is None else l for l in per_layer])
-        out = fwd_j(params, batch, jnp.asarray(stack))
-        return float(jnp.abs(out - base).mean())
-
+    # per-(layer, operator) drift, measured one probe at a time through the
+    # shared sensitivity pipeline (biased LUT errors make drift non-linear
+    # in mae16, so the QoS plan runs on measured costs rather than the
+    # linear model); `python -m repro.sensitivity.profile --library ...`
+    # persists the same measurement for the serve launcher's --profile
     print(f"\nmeasuring per-(layer, operator) drift on {cfg.name} "
           f"({L} layers x {len(compiled)} operators)...")
-    costs = measure_layer_costs(eval_drift, L, compiled)
+    costs = measure_cost_matrix(cfg, params, batch, compiled)
     print("  drift matrix (layers x operators):")
     print(np.array2string(costs, precision=4, suppress_small=True))
 

@@ -50,6 +50,35 @@ through a two-level Pallas kernel — four 16x16-tile LUT matmuls combined
 by shift-add on the MXU — that bit-matches the gather oracle; everything
 (adaptive controller, library watcher, hot-swap-without-retrace) works at
 either width, one width per serve.
+
+Measured sensitivities & QoS classes
+------------------------------------
+Uniform sensitivities price every layer the same; ``repro.sensitivity``
+replaces them with *measurement*.  Profile the model once (one layer
+perturbed at a time against the exact oracle, per serving width, plus the
+full per-(layer, operator) drift matrix over the library's frontier),
+then serve with per-request traffic tiers and a per-layer width map:
+
+    python -m repro.sensitivity.profile --arch gemma3-1b --reduced \
+        --library runs/lib --out runs/lib/_profiles/gemma3-1b.json
+    python -m repro.launch.serve --reduced --library runs/lib \
+        --profile runs/lib/_profiles/gemma3-1b.json --mixed-width \
+        --qos-class "gold:0.02,std:0.05,batch:0.5" \
+        --class-mix "gold:0.1,std:0.6,batch:0.3" \
+        --bench-json BENCH_serve.json
+
+``--qos-class`` declares named tiers with their own drift budgets: each
+class gets its own request queue (drained in listed priority order) and
+decodes on its own ladder level — ``gold`` rides a near-exact plan while
+``batch`` rides the aggressive end, in the same process, against the same
+single decode trace.  ``--mixed-width`` picks a per-layer width map by
+one greedy descent over both frontiers at once: sensitive layers keep the
+native 16x16 tiles, tolerant layers take composed 256x256 W8A8 tables
+whose composed area undercuts the best uniform-width plan at the same
+drift budget (the bench summary's ``mixed`` block reports the
+comparison).  During the serve, shadow-step drift samples feed an online
+per-layer EWMA estimator (``repro.sensitivity.online``) that keeps the
+measured profile fresh.
 """
 
 import numpy as np

@@ -241,6 +241,37 @@ def plan_report(plan) -> str:
     return "\n".join(lines)
 
 
+def sensitivity_report(profile) -> str:
+    """Human-readable measured per-layer sensitivity table for a
+    :class:`~repro.sensitivity.profile.SensitivityProfile` — one column
+    per profiled serving width (drift per unit compiled-table mae),
+    printed next to the per-layer operator table so a plan can be read
+    against the measurements that priced it."""
+    widths = profile.widths
+    head = f"{'layer':>5s}"
+    for b in widths:
+        head += f"  {'w' + str(b) + ' drift/mae':>14s}"
+    lines = [f"measured sensitivities: {profile.model} "
+             f"({profile.n_layers} layers)", head]
+    sens = {b: profile.sensitivities(b) for b in widths}
+    for l in range(profile.n_layers):
+        row = f"{l:>5d}"
+        for b in widths:
+            row += f"  {sens[b][l]:>14.5f}"
+        lines.append(row)
+    for b in widths:
+        hot = int(sens[b].argmax())
+        lines.append(
+            f"w{b}: most sensitive layer {hot} "
+            f"({sens[b][hot]:.5f}), least {int(sens[b].argmin())} "
+            f"({sens[b].min():.5f})"
+            + (f", measured cost matrix over "
+               f"{len(profile.costs[b][0])} operator(s)"
+               if b in profile.costs else "")
+        )
+    return "\n".join(lines)
+
+
 def model_flops_train(n_active_params: int, tokens: int) -> float:
     return 6.0 * n_active_params * tokens
 

@@ -22,6 +22,24 @@ Three serving modes:
 W4A4 on the native 16x16 tables, 8 serves W8A8 on 256x256 tables composed
 from the same searched blocks (:mod:`repro.precision`); all three modes
 and the watcher work at either width.
+
+Measured sensitivities, QoS classes, mixed width
+(:mod:`repro.sensitivity`):
+
+* ``--profile p.json`` prices plans with a *measured* per-layer
+  sensitivity profile (``python -m repro.sensitivity.profile``) instead
+  of the uniform linear model;
+* ``--qos-class "gold:0.02,batch:0.2"`` declares per-request traffic
+  tiers with their own drift budgets — per-class queues drain in priority
+  order and each batch decodes on its class's ladder level (with
+  ``--adaptive`` the load-driven global level still caps everyone);
+  ``--class-mix`` shapes the synthetic arrival mix;
+* ``--mixed-width`` serves a per-layer width map — sensitive layers on
+  native 16x16 tiles, tolerant layers on composed 256x256 W8A8 tables —
+  chosen by one greedy descent over both frontiers at once
+  (``--mixed-budget``, default auto).  The decode step still traces
+  exactly once; the bench summary reports the mixed plan's area against
+  the best uniform-width plan at the same budget.
 """
 
 from __future__ import annotations
@@ -58,21 +76,31 @@ def _frontier(library: str, width):
         raise SystemExit(str(e))
 
 
-def _startup_plan(cfg, compiled, exact_area, budget: float):
-    """The legacy one-shot selection (uniform sensitivities, mae16-unit
-    budget); ``examples/approx_inference.py --library`` measures real
-    per-layer drift budgets."""
+def _startup_plan(cfg, compiled, exact_area, budget: float, sens=None):
+    """The one-shot selection: uniform sensitivities (mae16-unit budget)
+    unless a measured ``--profile`` cost model is at hand."""
     from ..library import select_plan
     from .analysis import plan_report
 
-    plan = select_plan(compiled, np.ones(cfg.n_layers), budget,
-                       exact_area=exact_area)
+    plan = select_plan(compiled,
+                       np.ones(cfg.n_layers) if sens is None else sens,
+                       budget, exact_area=exact_area)
     print(f"QoS plan ({len(compiled)} frontier operator(s)):")
     print(plan_report(plan))
     if all(c.key is None for c in plan.choices):
         print("note: budget admits no downgrade — every layer stays exact "
-              "(serving budgets are mae16 units; try a larger --qos-budget)")
+              "(try a larger --qos-budget)")
     return plan
+
+
+def _budget_level(ladder, budget: float) -> int:
+    """Deepest ladder level whose selection budget fits ``budget`` — the
+    startup level of a non-adaptive mixed-width serve."""
+    lvl = 0
+    for i, p in enumerate(ladder.plans):
+        if p.budget <= budget:
+            lvl = i
+    return lvl
 
 
 def main() -> None:
@@ -90,9 +118,37 @@ def main() -> None:
                     help="LUT operand width: 4 = native W4A4 (16x16 "
                          "tables), 8 = W8A8 — searched blocks composed "
                          "into 256x256 tables (repro.precision)")
-    ap.add_argument("--qos-budget", type=float, default=50.0,
-                    help="startup QoS budget in summed compiled-table mae16 "
-                         "units (non-adaptive mode only)")
+    ap.add_argument("--qos-budget", type=float, default=None,
+                    help="startup QoS budget (non-adaptive mode only). "
+                         "Without --profile: summed compiled-table mae16 "
+                         "units, default 50.0.  With --profile the plan is "
+                         "priced in measured-drift (mean |Δlogit|) units, "
+                         "so the budget must be given explicitly — the "
+                         "mae16-scaled default would admit the full "
+                         "greedy descent.")
+    # ---- measured sensitivities / QoS classes / mixed width ---------------
+    ap.add_argument("--profile", default=None,
+                    help="measured SensitivityProfile JSON (produced by "
+                         "python -m repro.sensitivity.profile); plans and "
+                         "ladders price operators with measured per-layer "
+                         "sensitivities instead of the uniform model")
+    ap.add_argument("--qos-class", default=None, metavar="SPEC",
+                    help='per-request QoS classes with drift budgets, e.g. '
+                         '"gold:0.02,std:0.05,batch:0.2" (listed order = '
+                         'drain priority); requires --library')
+    ap.add_argument("--class-mix", default=None, metavar="SPEC",
+                    help='synthetic arrival mix over the declared classes, '
+                         'e.g. "gold:0.1,std:0.6,batch:0.3" (default: '
+                         'equal shares)')
+    ap.add_argument("--mixed-width", action="store_true",
+                    help="serve a per-layer width map (native 16x16 tiles "
+                         "for sensitive layers, composed 256x256 W8A8 "
+                         "tables for tolerant ones) chosen jointly over "
+                         "both frontiers; incompatible with --width 8")
+    ap.add_argument("--mixed-budget", type=float, default=None,
+                    help="drift budget for the width-map selection "
+                         "(default: auto — the greedy breakpoint with the "
+                         "largest mixed-vs-uniform area advantage)")
     # ---- load profile -----------------------------------------------------
     ap.add_argument("--schedule", choices=PROFILES, default="steady",
                     help="synthetic load profile shape")
@@ -130,48 +186,163 @@ def main() -> None:
         raise SystemExit("--adaptive requires --library (the frontier to walk)")
     if args.watch_library and not args.library:
         raise SystemExit("--watch-library requires --library")
+    if args.qos_class and not args.library:
+        raise SystemExit("--qos-class requires --library (classes pick "
+                         "ladder levels)")
+    if args.qos_class and not args.profile:
+        raise SystemExit(
+            "--qos-class budgets are measured-drift (mean |Δlogit|) units "
+            "and cap ladder levels by predicted drift — without a measured "
+            "--profile the ladder's predictions are in mae16 cost units "
+            "and the caps would be meaningless.  Measure one first: "
+            "python -m repro.sensitivity.profile --library <dir> ...")
+    if args.class_mix and not args.qos_class:
+        raise SystemExit("--class-mix requires --qos-class")
+    if args.mixed_width and not args.library:
+        raise SystemExit("--mixed-width requires --library")
+    if args.mixed_width and args.width != 4:
+        raise SystemExit("--mixed-width chooses per-layer widths itself; "
+                         "drop --width")
+
+    profile_obj = None
+    if args.profile:
+        from ..sensitivity.profile import load_profile
+
+        profile_obj = load_profile(args.profile)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     plan = compiled = exact_area = controller = watcher = None
+    ladder = scheduler = online = None
+    mixed_report = width_map = None
+    class_mix = None
     if args.library:
         from ..precision.plans import select_width
+        from ..sensitivity.profile import costs_for
 
         if cfg.family == "audio":
             raise SystemExit("--library: LUT routing supports LM families only")
-        width = select_width(cfg, requested=args.width)
-        cfg = cfg.with_approx_mlp(bits=width.bits)
-        compiled, exact_area, bits = _frontier(args.library, width)
-        print(f"library {args.library}: {len(compiled)} operator(s) on the "
-              f"{bits}-bit multiplier frontier "
-              f"(serving W{width.bits}A{width.bits}, "
-              f"{width.side}x{width.side} tables)")
+        if profile_obj is not None:
+            from .analysis import sensitivity_report
+
+            print(sensitivity_report(profile_obj))
+        need_ladder = args.adaptive or bool(args.qos_class)
+        if args.mixed_width:
+            from ..precision.plans import (
+                build_mixed_ladder,
+                choose_mixed_budget,
+                load_mixed_frontier,
+                mixed_comparison,
+            )
+
+            cfg = cfg.with_approx_mlp()
+            mixed = load_mixed_frontier(args.library)
+            sens = {bits: costs_for(profile_obj, bits, fr.compiled,
+                                    cfg.n_layers)
+                    for bits, fr in mixed.by_width.items()}
+            # what the *engine* keeps for watcher re-pricing: with a
+            # profile it re-derives matrices itself; without one it needs
+            # per-width vectors (a frozen (L, O) matrix cannot follow a
+            # frontier a background sweep changes)
+            engine_sens = (sens if profile_obj is not None
+                           else {b: np.ones(cfg.n_layers)
+                                 for b in mixed.widths})
+            budget = (args.mixed_budget if args.mixed_budget is not None
+                      else choose_mixed_budget(mixed, sens, cfg.n_layers))
+            mixed_report, width_map, union_plan = mixed_comparison(
+                mixed, sens, budget, cfg.n_layers)
+            compiled = mixed.compiled
+            exact_area = mixed.exact_area(mixed.native_bits)
+            counts = mixed_report["width_layers"]
+            per_w = ", ".join(f"{len(fr.compiled)} op(s) @ W{b}"
+                              for b, fr in sorted(mixed.by_width.items()))
+            print(f"library {args.library}: mixed-width frontier ({per_w})")
+            print(f"width map (budget {budget:.5f}): "
+                  f"{' '.join('w' + str(b) for b in width_map)} — "
+                  f"layers per width {counts}")
+            print(f"mixed area {mixed_report['mixed_area']:.3f} µm² vs best "
+                  f"uniform {mixed_report['best_uniform_area']:.3f} µm² "
+                  f"(advantage {mixed_report['advantage']:.3f})")
+            ladder = build_mixed_ladder(mixed, width_map, sens,
+                                        levels=args.ladder_levels)
+            plan = ladder.plan(0 if need_ladder else
+                               min(len(ladder) - 1, _budget_level(
+                                   ladder, budget)))
+            if args.watch_library:
+                watcher = LibraryWatcher(args.library,
+                                         min_poll_s=args.poll_s,
+                                         widths=mixed.widths)
+        else:
+            width = select_width(cfg, requested=args.width)
+            cfg = cfg.with_approx_mlp(bits=width.bits)
+            compiled, exact_area, bits = _frontier(args.library, width)
+            sens = (costs_for(profile_obj, width.bits, compiled,
+                              cfg.n_layers)
+                    if profile_obj is not None else None)
+            print(f"library {args.library}: {len(compiled)} operator(s) on "
+                  f"the {bits}-bit multiplier frontier "
+                  f"(serving W{width.bits}A{width.bits}, "
+                  f"{width.side}x{width.side} tables)")
+            if need_ladder:
+                ladder = PlanLadder.build(compiled, cfg.n_layers,
+                                          exact_area=exact_area,
+                                          sensitivities=sens,
+                                          levels=args.ladder_levels)
+                plan = ladder.plan(0)   # start exact
+            else:
+                if sens is not None and args.qos_budget is None:
+                    raise SystemExit(
+                        "--profile prices the startup plan in measured-"
+                        "drift units; give an explicit --qos-budget in "
+                        "mean-|Δlogit| terms (the mae16-scaled default "
+                        "of 50.0 would max-downgrade every layer)")
+                plan = _startup_plan(
+                    cfg, compiled, exact_area,
+                    50.0 if args.qos_budget is None else args.qos_budget,
+                    sens=sens)
+            if args.watch_library:
+                # non-native widths pin the watcher to the composed
+                # frontier; width 4 keeps the legacy block-frontier
+                # reload semantics
+                tb = width.bits if width.bits != 4 else None
+                watcher = LibraryWatcher(args.library, min_poll_s=args.poll_s,
+                                         target_bits=tb)
         if args.adaptive:
-            ladder = PlanLadder.build(compiled, cfg.n_layers,
-                                      exact_area=exact_area,
-                                      levels=args.ladder_levels)
             controller = QoSController(ladder, ControllerConfig(
                 target_ms_per_step=args.target_ms_per_step,
                 drift_budget=args.drift_budget,
                 shadow_every=args.shadow_every,
             ))
-            plan = ladder.plan(0)   # start exact; the controller walks up
             print(f"adaptive: {len(ladder)}-level plan ladder, target "
                   f"{args.target_ms_per_step} ms/step, drift budget "
                   f"{args.drift_budget}")
-        else:
-            plan = _startup_plan(cfg, compiled, exact_area, args.qos_budget)
-        if args.watch_library:
-            # non-native widths pin the watcher to the composed frontier;
-            # width 4 keeps the legacy block-frontier reload semantics
-            tb = width.bits if width.bits != 4 else None
-            watcher = LibraryWatcher(args.library, min_poll_s=args.poll_s,
-                                     target_bits=tb)
+        if args.qos_class:
+            from ..sensitivity.classes import (ClassBook, ClassScheduler,
+                                               parse_class_mix)
+
+            book = ClassBook.parse(args.qos_class)
+            scheduler = ClassScheduler(book, ladder,
+                                       shadow_every=args.shadow_every)
+            class_mix = (parse_class_mix(args.class_mix) if args.class_mix
+                         else book.equal_mix())
+            tiers = ", ".join(
+                f"{c.name}(budget {c.drift_budget}, cap level "
+                f"{scheduler.cap(c.name)})" for c in book)
+            print(f"QoS classes: {tiers}")
+        if args.adaptive or args.qos_class:
+            from ..sensitivity import OnlineSensitivity
+
+            if profile_obj is not None:
+                online = OnlineSensitivity.from_profile(
+                    profile_obj, args.width, width_map=width_map)
+            else:
+                online = OnlineSensitivity(cfg.n_layers)
 
     mesh = make_smoke_mesh()
     key = jax.random.PRNGKey(args.seed)
     profile = make_profile(args.schedule, ticks=args.ticks,
                            per_tick=args.per_tick or args.batch,
-                           prompt_len=args.prompt_len, gen_len=args.gen_len)
+                           prompt_len=args.prompt_len, gen_len=args.gen_len,
+                           class_mix=class_mix)
 
     with parallel.activate(mesh), mesh:
         params = init_model(cfg, key)
@@ -188,10 +359,15 @@ def main() -> None:
             cfg, params, batch=args.batch, prompt_len=args.prompt_len,
             gen_len=args.gen_len, plan=plan, compiled=compiled,
             exact_area=exact_area, warmup_caches=warmup,
+            width_map=width_map,
+            sensitivities=(engine_sens if args.library and args.mixed_width
+                           else None),
+            sens_profile=profile_obj,
         )
         t0 = time.time()
         telemetry = engine.serve(profile, controller=controller,
-                                 watcher=watcher, telemetry=Telemetry(),
+                                 watcher=watcher, scheduler=scheduler,
+                                 online=online, telemetry=Telemetry(),
                                  seed=args.seed, log=print)
         wall = time.time() - t0
 
@@ -208,6 +384,17 @@ def main() -> None:
     if engine.plan is not None:
         print(f"  plan swaps: {s['swaps']} {s['swaps_by_reason']} — decode "
               f"step traced {engine.trace_count}x")
+    if scheduler is not None:
+        for name, row in s.get("classes", {}).items():
+            budget = scheduler.book.get(name).drift_budget
+            drift = row.get("mean_drift")
+            print(f"  class {name:<8s}: {row['requests']} req, "
+                  f"{row['ms_per_step']} ms/step, mean drift "
+                  f"{'-' if drift is None else drift} "
+                  f"(budget {budget})")
+    if online is not None and online.n_updates:
+        print(f"  online sensitivities ({online.n_updates} samples): "
+              f"{np.round(online.sensitivities(), 4).tolist()}")
     if args.telemetry:
         telemetry.dump(args.telemetry)
         print(f"telemetry -> {args.telemetry}")
@@ -215,8 +402,20 @@ def main() -> None:
         # routing facts for smoke gates: the serving width and how many
         # layers actually run a searched (non-exact) operator
         s["width_bits"] = engine.width.bits if engine.width else None
+        s["widths"] = list(engine.widths)
         s["approx_layers"] = sum(
             1 for c in engine.plan.choices if c.key is not None)
+        s["trace_count"] = engine.trace_count
+    if mixed_report is not None:
+        s["mixed"] = mixed_report
+    if scheduler is not None:
+        for name, row in s.get("classes", {}).items():
+            row["drift_budget"] = scheduler.book.get(name).drift_budget
+        s["class_state"] = scheduler.snapshot(
+            controller.level if controller is not None else None)
+    if online is not None and online.n_updates:
+        s["online_sensitivity"] = np.round(
+            online.sensitivities(), 6).tolist()
     if args.bench_json:
         from pathlib import Path
 

@@ -104,23 +104,46 @@ def _cost_matrix(
     if sens.ndim == 1:
         maes = np.array([comp.mae16 for _, comp in operators])
         return sens[:, None] * maes[None, :]           # (L, O) linear model
-    assert sens.shape == (sens.shape[0], len(operators))
+    if sens.ndim != 2 or sens.shape[1] != len(operators):
+        # ValueError (not assert) on purpose: a measured matrix priced
+        # against a *stale* frontier reaches here through the serving
+        # watcher's refresh path, which must skip the refresh and keep
+        # serving rather than die on a background fleet sweep.  (The
+        # layer dimension is whatever the caller measured; a wrong layer
+        # count surfaces in validate_lut_stack.)
+        raise ValueError(
+            f"cost matrix is {sens.shape} but the frontier has "
+            f"{len(operators)} operator(s); measured matrices must be "
+            f"re-priced against a refreshed frontier"
+        )
     return sens
 
 
 def _downgrade_ladders(
     operators: Sequence[tuple[OperatorRecord, CompiledLut]],
     costs: np.ndarray,
-    exact_area: float,
+    exact_area: float | Sequence[float] | np.ndarray,
+    allowed: np.ndarray | None = None,
 ) -> list[list[tuple[str | None, float, float]]]:
     """Per-layer downgrade ladder: exact first, then cost-ascending operators
     that strictly save area over the previous rung (dominated rungs and
-    rungs costlier than a cheaper-area option never help)."""
+    rungs costlier than a cheaper-area option never help).
+
+    ``exact_area`` may be per-layer: a mixed-width plan anchors each layer
+    to the exact multiplier of *that layer's* serving width.  ``allowed``
+    is an optional ``(L, O)`` boolean mask restricting which operators a
+    layer may run (a frozen width map restricts each layer to operators of
+    its own width — see :mod:`repro.precision.plans`)."""
+    n_layers = costs.shape[0]
+    ex = np.broadcast_to(
+        np.asarray(exact_area, dtype=np.float64), (n_layers,))
     ladders: list[list[tuple[str | None, float, float]]] = []
-    for l in range(costs.shape[0]):
-        order = sorted(range(len(operators)),
+    for l in range(n_layers):
+        order = sorted((o for o in range(len(operators))
+                        if allowed is None or allowed[l, o]),
                        key=lambda o: (costs[l, o], operators[o][0].area))
-        ladder: list[tuple[str | None, float, float]] = [(None, exact_area, 0.0)]
+        ladder: list[tuple[str | None, float, float]] = [
+            (None, float(ex[l]), 0.0)]
         for o in order:
             rec = operators[o][0]
             if rec.area < ladder[-1][1]:
@@ -162,7 +185,8 @@ def select_plan(
     sensitivities: Sequence[float] | np.ndarray,
     budget: float,
     *,
-    exact_area: float,
+    exact_area: float | Sequence[float] | np.ndarray,
+    allowed: np.ndarray | None = None,
 ) -> LayerPlan:
     """Greedy area-descent over the (layer, operator) lattice.
 
@@ -172,11 +196,13 @@ def select_plan(
     matrix ``(L, len(operators))`` of per-(layer, operator) drifts
     aligned with ``operators`` — LUT errors are biased, so measured
     per-operator costs predict far better than the linear model.
-    ``budget``: total predicted drift allowed.
+    ``budget``: total predicted drift allowed.  ``exact_area`` may be a
+    per-layer vector and ``allowed`` an ``(L, O)`` operator mask (see
+    :func:`_downgrade_ladders`).
     """
     costs = _cost_matrix(operators, sensitivities)
     n_layers = costs.shape[0]
-    ladders = _downgrade_ladders(operators, costs, exact_area)
+    ladders = _downgrade_ladders(operators, costs, exact_area, allowed)
 
     level = [0] * n_layers
     spent = 0.0
@@ -190,9 +216,11 @@ def select_plan(
     for l in range(n_layers):
         key, a, e = ladders[l][level[l]]
         choices.append(LayerChoice(l, key, a, predicted_drift=e))
+    # per-layer exact areas (mixed-width anchors) collapse to their mean so
+    # exact_total_area still sums the true per-layer exact baseline
     return LayerPlan(
         choices=choices, budget=float(budget), predicted_total=float(spent),
-        exact_area=float(exact_area),
+        exact_area=float(np.mean(np.asarray(exact_area, dtype=np.float64))),
     )
 
 
@@ -201,7 +229,8 @@ def refresh_plan(
     operators: Sequence[tuple[OperatorRecord, CompiledLut]],
     sensitivities: Sequence[float] | np.ndarray,
     *,
-    exact_area: float,
+    exact_area: float | Sequence[float] | np.ndarray,
+    allowed: np.ndarray | None = None,
 ) -> LayerPlan:
     """Re-select under ``plan``'s original budget against a refreshed
     frontier — the incremental entry point the serving controller and
@@ -210,15 +239,16 @@ def refresh_plan(
     refreshes keep the area-vs-budget monotonicity of :func:`select_plan`.
     """
     return select_plan(operators, sensitivities, plan.budget,
-                       exact_area=exact_area)
+                       exact_area=exact_area, allowed=allowed)
 
 
 def plan_ladder(
     operators: Sequence[tuple[OperatorRecord, CompiledLut]],
     sensitivities: Sequence[float] | np.ndarray,
     *,
-    exact_area: float,
+    exact_area: float | Sequence[float] | np.ndarray,
     levels: int = 6,
+    allowed: np.ndarray | None = None,
 ) -> list[LayerPlan]:
     """A monotone ladder of plans walking the area/accuracy frontier.
 
@@ -231,7 +261,7 @@ def plan_ladder(
     """
     assert levels >= 2, "a ladder spans at least its two endpoints"
     costs = _cost_matrix(operators, sensitivities)
-    ladders = _downgrade_ladders(operators, costs, exact_area)
+    ladders = _downgrade_ladders(operators, costs, exact_area, allowed)
     cum: list[float] = []
     spent = 0.0
     for _, d_cost in _greedy_steps(ladders):
@@ -248,7 +278,8 @@ def plan_ladder(
         for i in idx:
             if cum[i] > budgets[-1]:  # zero-cost runs collapse into one level
                 budgets.append(cum[i])
-    return [select_plan(operators, sensitivities, b, exact_area=exact_area)
+    return [select_plan(operators, sensitivities, b, exact_area=exact_area,
+                        allowed=allowed)
             for b in budgets]
 
 
@@ -257,7 +288,24 @@ def validate_lut_stack(prev, new) -> None:
     the live one in shape and dtype, otherwise the jitted decode step would
     silently retrace (or worse, mis-broadcast) instead of reusing its
     compiled executable.  Raises :class:`ValueError` with both signatures.
+
+    Mixed-width serving carries one stack per width group as a
+    ``{bits: (n_group, side, side)}`` dict; the group structure is part of
+    the traced shapes, so both sides must be dicts over identical widths
+    and every group stack must match individually.
     """
+    if isinstance(prev, dict) or isinstance(new, dict):
+        pw = sorted(prev) if isinstance(prev, dict) else None
+        nw = sorted(new) if isinstance(new, dict) else None
+        if pw is None or nw is None or pw != nw:
+            raise ValueError(
+                f"mixed-width stack groups changed: widths {pw} -> {nw}; "
+                f"the per-layer width map is frozen for the lifetime of a "
+                f"serve (a width-map move needs a restart) — refusing."
+            )
+        for bits in pw:
+            validate_lut_stack(prev[bits], new[bits])
+        return
     ps, pd = tuple(prev.shape), prev.dtype
     ns, nd = tuple(new.shape), new.dtype
     if ps != ns or pd != nd:

@@ -299,9 +299,11 @@ def decode_step(
     tokens: jax.Array,   # (B, 1) int32 — the newest token
     pos: jax.Array,      # () int32 — its absolute position
     *,
-    luts: jax.Array | None = None,   # (L, side, side) per-layer LUTs or
-    #                                  (side, side); side = 16 (W4A4) or
-    #                                  256 (composed W8A8 tables)
+    luts: jax.Array | dict[int, jax.Array] | None = None,
+    #     (L, side, side) per-layer LUTs, (side, side) shared, or a
+    #     mixed-width dict {bits: (n_group, side, side)} — side = 16
+    #     (W4A4) or 256 (composed W8A8 tables)
+    width_map: tuple[int, ...] | None = None,
 ) -> tuple[jax.Array, list[Params]]:
     """One serving step: append token at ``pos``, return next-token logits.
 
@@ -314,21 +316,41 @@ def decode_step(
     shapes are jit-static, so width moves recompile while same-width plan
     swaps never do.
 
+    Mixed-width serving passes ``luts`` as a dict holding one stack per
+    width group plus a static ``width_map`` (one entry per layer): layer
+    ``i`` reads table ``luts[width_map[i]]`` at its position within its
+    group (layer order within the group).  The width map is part of the
+    traced python structure, so it is frozen per trace — same-map plan
+    swaps re-stack the group arrays and reuse the one executable, exactly
+    like the single-width case.
+
     ``luts`` must ride through ``jax.jit`` as a *real argument* (a jax
-    array / tracer), never a closed-over host constant: the adaptive
-    serving runtime (:mod:`repro.serving`) hot-swaps plans between batches
-    by passing a different stack to the same traced executable, which only
-    works if tracing never baked the table in.
+    array / tracer pytree), never a closed-over host constant: the
+    adaptive serving runtime (:mod:`repro.serving`) hot-swaps plans
+    between batches by passing a different stack to the same traced
+    executable, which only works if tracing never baked the table in.
     """
     win = window_schedule(cfg)
     luts_ = luts if cfg.approx_mlp else None
-    if isinstance(luts_, np.ndarray):
+    leaves = luts_.values() if isinstance(luts_, dict) else (luts_,)
+    if any(isinstance(v, np.ndarray) for v in leaves):
         # a host numpy table would be traced as a compile-time constant and
         # every plan swap would silently rebuild the executable
         raise TypeError(
             "decode_step luts must be a jax array passed as a jit argument, "
             "not a numpy constant (serving hot-swap relies on this)"
         )
+    group_pos: list[int] | None = None
+    if isinstance(luts_, dict):
+        if width_map is None or len(width_map) != cfg.n_layers:
+            raise ValueError(
+                f"a mixed-width luts dict needs a width_map with one entry "
+                f"per layer (got {width_map!r} for {cfg.n_layers} layers)"
+            )
+        # layer i's row within its width group = how many earlier layers
+        # share its width (group stacks are packed in layer order)
+        group_pos = [width_map[:i].count(width_map[i])
+                     for i in range(cfg.n_layers)]
     x = params["embed"][tokens].astype(cfg.jnp_dtype)
     x = shard(x, "batch", None, None)
     new_caches: list[Params] = []
@@ -343,7 +365,9 @@ def decode_step(
         else:
             w = win
         lut_i = None
-        if luts_ is not None:
+        if isinstance(luts_, dict):
+            lut_i = luts_[width_map[i]][group_pos[i]]
+        elif luts_ is not None:
             lut_i = luts_[i] if jnp.ndim(luts_) == 3 else luts_
         x, nc = _block_decode(cfg, lp, x, cache, pos, w, lut_i)
         new_caches.append(nc)

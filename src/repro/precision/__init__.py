@@ -58,6 +58,17 @@ _LAZY = {
     "load_frontier": ".plans",
     "WidthFrontier": ".plans",
     "build_ladder": ".plans",
+    "MixedFrontier": ".plans",
+    "load_mixed_frontier": ".plans",
+    "mixed_cost_matrix": ".plans",
+    "select_width_map": ".plans",
+    "mixed_comparison": ".plans",
+    "choose_mixed_budget": ".plans",
+    "build_mixed_ladder": ".plans",
+    "stack_mixed_luts": ".plans",
+    "exact_mixed_stacks": ".plans",
+    "group_layers": ".plans",
+    "width_of_key": ".plans",
 }
 
 
@@ -96,4 +107,15 @@ __all__ = [
     "load_frontier",
     "WidthFrontier",
     "build_ladder",
+    "MixedFrontier",
+    "load_mixed_frontier",
+    "mixed_cost_matrix",
+    "select_width_map",
+    "mixed_comparison",
+    "choose_mixed_budget",
+    "build_mixed_ladder",
+    "stack_mixed_luts",
+    "exact_mixed_stacks",
+    "group_layers",
+    "width_of_key",
 ]

@@ -1,0 +1,69 @@
+"""Measured sensitivity: the fourth pillar (search → library →
+**sensitivity** → serving).
+
+The paper's premise is spending area/accuracy budget where it buys the
+most; everything upstream of this package produces the operators and the
+runtime, and this package produces the *measurements* that decide where
+the budget goes:
+
+* :mod:`repro.sensitivity.profile` — offline per-layer drift profiling:
+  perturb one layer at a time against the exact oracle (deterministic
+  truncation probes, optional full per-(layer, operator) matrices over a
+  library's frontier) and persist a :class:`~repro.sensitivity.profile.SensitivityProfile`
+  next to the library.  ``python -m repro.sensitivity.profile`` is the
+  producer; the serve launcher's ``--profile`` and
+  ``examples/approx_inference.py`` are the consumers.
+* :mod:`repro.sensitivity.online` — fold the serving engine's shadow-step
+  drift samples into per-layer EWMA sensitivities, attributed by the
+  operator each plan assigned per layer.
+* :mod:`repro.sensitivity.classes` — per-request QoS classes: named
+  traffic tiers with their own drift budgets; the request queue,
+  controller and telemetry are class-aware, so ``gold`` decodes on a more
+  exact plan than ``batch`` in the same serve.
+
+``online``/``classes`` are numpy-only; ``profile`` pulls in the jax model
+stack and is lazy here (same PEP 562 arrangement as ``repro.library``).
+"""
+
+from .classes import ClassBook, ClassScheduler, QoSClass, parse_class_mix
+from .online import OnlineSensitivity
+
+_LAZY = {
+    "Probe": ".profile",
+    "SensitivityProfile": ".profile",
+    "truncation_probe": ".profile",
+    "model_eval_drift": ".profile",
+    "measure_profile": ".profile",
+    "measure_cost_matrix": ".profile",
+    "costs_for": ".profile",
+    "default_profile_path": ".profile",
+    "load_profile": ".profile",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from importlib import import_module
+
+        value = getattr(import_module(_LAZY[name], __name__), name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "QoSClass",
+    "ClassBook",
+    "ClassScheduler",
+    "parse_class_mix",
+    "OnlineSensitivity",
+    "Probe",
+    "SensitivityProfile",
+    "truncation_probe",
+    "model_eval_drift",
+    "measure_profile",
+    "measure_cost_matrix",
+    "costs_for",
+    "default_profile_path",
+    "load_profile",
+]

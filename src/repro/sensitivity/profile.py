@@ -1,0 +1,332 @@
+"""Offline per-layer sensitivity profiling: measure, persist, reuse.
+
+The QoS planner is only as good as its drift model, and until now every
+consumer re-derived that model ad hoc — ``examples/approx_inference.py``
+carried its own drift-matrix loop, the serve CLI fell back to uniform
+sensitivities.  This module is the single measured code path:
+
+* a **probe** (:func:`truncation_probe`) is a deterministic synthetic
+  approximate table — the exact product table with its low bits dropped —
+  so profiling needs no operator library and two runs of the profiler
+  produce bit-identical profiles;
+* :func:`model_eval_drift` builds the one jitted forward evaluator every
+  measurement routes through (per-layer table overrides vs the all-exact
+  baseline *at the same width*, so the measured number is pure LUT
+  approximation drift);
+* :func:`measure_profile` probes one layer at a time at every serving
+  width and emits a :class:`SensitivityProfile` — per-width, per-layer
+  drift per unit compiled-table mae — persisted as JSON next to the
+  operator library (``<library>/_profiles/<model>.json``);
+* with a library at hand, :func:`measure_cost_matrix` measures the full
+  per-(layer, operator) drift matrix for a width's frontier; the profile
+  stores it keyed by operator content keys so plan construction can price
+  *known* operators by measurement and fall back to the linear model only
+  for operators a background fleet sweep adds later
+  (:func:`costs_for`).
+
+CLI (writes the profile the serve launcher's ``--profile`` consumes)::
+
+    python -m repro.sensitivity.profile --arch gemma3-1b --reduced \
+        --library runs/lib --out runs/lib/_profiles/gemma3-1b.json
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+from ..precision.widths import SUPPORTED_WIDTHS, exact_table, get_width
+
+__all__ = [
+    "Probe",
+    "truncation_probe",
+    "SensitivityProfile",
+    "model_eval_drift",
+    "measure_profile",
+    "measure_cost_matrix",
+    "costs_for",
+    "default_profile_path",
+    "load_profile",
+]
+
+PROFILE_FORMAT = 1
+
+
+@dataclass(frozen=True)
+class Probe:
+    """A synthetic approximate operator used to excite one layer at a
+    time.  Duck-types the slice of ``CompiledLut`` the qos measurement
+    helpers read (``lut`` + ``mae16``)."""
+
+    lut: np.ndarray          # (side, side) int32
+    mae: float
+    bits: int
+    drop: int
+
+    @property
+    def mae16(self) -> float:   # CompiledLut-compatible spelling
+        return self.mae
+
+
+def truncation_probe(bits: int, drop: int | None = None) -> Probe:
+    """The exact ``bits``-bit product table with the low ``drop`` bits
+    zeroed (default: the low half of the product).  Deterministic, well
+    above numerical noise, and library-independent — the probe is pure
+    arithmetic, so a profile never depends on what a store happens to
+    hold."""
+    w = get_width(bits)
+    drop = bits if drop is None else int(drop)
+    exact = exact_table("mul", bits)
+    lut = (exact >> drop) << drop
+    mae = float(np.abs(lut - exact).mean())
+    assert mae > 0, "probe must be approximate"
+    return Probe(lut=lut.astype(np.int32), mae=mae, bits=w.bits, drop=drop)
+
+
+@dataclass
+class SensitivityProfile:
+    """Measured per-layer drift sensitivities of one model, per width.
+
+    ``sens[bits][l]`` is layer ``l``'s measured drift per unit
+    compiled-table mae at serving width ``bits`` (the linear model the
+    QoS planner prices unknown operators with).  ``costs[bits]`` is an
+    optional measured per-(layer, operator) drift matrix over a concrete
+    frontier, keyed by operator content keys — exact prices for the
+    operators that existed at profiling time.
+    """
+
+    model: str
+    n_layers: int
+    sens: dict[int, np.ndarray]                 # bits -> (L,)
+    probe_mae: dict[int, float] = field(default_factory=dict)
+    costs: dict[int, tuple[list[str], np.ndarray]] = field(
+        default_factory=dict)                   # bits -> (keys, (L, O))
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def widths(self) -> tuple[int, ...]:
+        return tuple(sorted(self.sens))
+
+    def sensitivities(self, bits: int) -> np.ndarray:
+        b = int(bits)
+        if b not in self.sens:
+            raise KeyError(
+                f"profile of {self.model!r} was not measured at width {b} "
+                f"(profiled widths: {self.widths}); re-run "
+                f"python -m repro.sensitivity.profile with --widths "
+                f"covering the serving width")
+        return np.asarray(self.sens[b], dtype=np.float64).copy()
+
+    # ------------------------------------------------------------- persist
+    def to_doc(self) -> dict:
+        return {
+            "format_version": PROFILE_FORMAT,
+            "model": self.model,
+            "n_layers": self.n_layers,
+            "sens": {str(b): np.asarray(s).tolist()
+                     for b, s in self.sens.items()},
+            "probe_mae": {str(b): m for b, m in self.probe_mae.items()},
+            "costs": {str(b): {"keys": list(keys),
+                               "matrix": np.asarray(m).tolist()}
+                      for b, (keys, m) in self.costs.items()},
+            "meta": self.meta,
+        }
+
+    def save(self, path) -> Path:
+        from ..library.store import atomic_write_json
+
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        atomic_write_json(p, self.to_doc())
+        return p
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "SensitivityProfile":
+        return cls(
+            model=doc["model"],
+            n_layers=int(doc["n_layers"]),
+            sens={int(b): np.asarray(s, dtype=np.float64)
+                  for b, s in doc["sens"].items()},
+            probe_mae={int(b): float(m)
+                       for b, m in doc.get("probe_mae", {}).items()},
+            costs={int(b): (list(d["keys"]),
+                            np.asarray(d["matrix"], dtype=np.float64))
+                   for b, d in doc.get("costs", {}).items()},
+            meta=doc.get("meta", {}),
+        )
+
+
+def load_profile(path) -> SensitivityProfile:
+    return SensitivityProfile.from_doc(json.loads(Path(path).read_text()))
+
+
+def default_profile_path(library, model: str) -> Path:
+    """Where a profile lives relative to the operator library it was
+    measured next to."""
+    return Path(library) / "_profiles" / f"{model}.json"
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+def model_eval_drift(cfg, params, batch, bits: int):
+    """The one measured-drift evaluator: returns ``eval_drift(per_layer)``
+    where ``per_layer[l]`` is layer ``l``'s ``(side, side)`` table
+    (``None`` = exact), evaluated as mean |Δlogit| against the all-exact
+    baseline at width ``bits``.  One jitted forward serves the baseline
+    and every probe (the per-layer stack is a plain argument)."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..models import forward_fn
+
+    assert cfg.approx_mlp, (
+        "profiling routes MLP matmuls through LUTs; build the config with "
+        ".with_approx_mlp()"
+    )
+    fwd = forward_fn(cfg)
+    fwd_j = jax.jit(lambda p, b, lut: fwd(cfg, p, b, lut=lut)[0])
+    w = get_width(bits)
+    exact = exact_table("mul", bits).astype(np.int32)
+    base_stack = np.broadcast_to(
+        exact, (cfg.n_layers, w.side, w.side)).copy()
+    base = fwd_j(params, batch, jnp.asarray(base_stack))
+
+    def eval_drift(per_layer) -> float:
+        stack = np.stack([exact if t is None else np.asarray(t, np.int32)
+                          for t in per_layer])
+        out = fwd_j(params, batch, jnp.asarray(stack))
+        return float(jnp.abs(out - base).mean())
+
+    return eval_drift
+
+
+def measure_profile(cfg, params, batch, *, widths=SUPPORTED_WIDTHS,
+                    drop: int | None = None,
+                    library=None, meta: dict | None = None
+                    ) -> SensitivityProfile:
+    """Probe one layer at a time at every serving width and (optionally,
+    with a library) measure the full per-(layer, operator) cost matrix of
+    each width's frontier.  Deterministic for fixed (cfg, params, batch).
+    """
+    from ..library.qos import measure_layer_costs, measure_sensitivities
+
+    sens: dict[int, np.ndarray] = {}
+    probe_mae: dict[int, float] = {}
+    costs: dict[int, tuple[list[str], np.ndarray]] = {}
+    for bits in sorted(int(b) for b in widths):
+        probe = truncation_probe(bits, drop)
+        ev = model_eval_drift(cfg, params, batch, bits)
+        sens[bits] = measure_sensitivities(ev, cfg.n_layers, probe)
+        probe_mae[bits] = probe.mae
+        if library is not None:
+            from ..precision.plans import load_frontier
+
+            compiled, _, _ = load_frontier(library, bits)
+            matrix = measure_layer_costs(ev, cfg.n_layers, compiled)
+            costs[bits] = ([rec.key for rec, _ in compiled], matrix)
+    return SensitivityProfile(
+        model=cfg.name, n_layers=cfg.n_layers, sens=sens,
+        probe_mae=probe_mae, costs=costs, meta=dict(meta or {}),
+    )
+
+
+def measure_cost_matrix(cfg, params, batch, compiled,
+                        bits: int | None = None) -> np.ndarray:
+    """Measured ``(L, O)`` drift matrix for one width's frontier — the
+    code path ``examples/approx_inference.py`` routes through (it used to
+    carry its own copy of this loop)."""
+    from ..library.qos import measure_layer_costs
+
+    if bits is None:
+        sides = {comp.lut.shape[-1] for _, comp in compiled}
+        assert len(sides) == 1, f"frontier mixes LUT sides {sorted(sides)}"
+        bits = sides.pop().bit_length() - 1
+    ev = model_eval_drift(cfg, params, batch, bits)
+    return measure_layer_costs(ev, cfg.n_layers, compiled)
+
+
+def costs_for(profile: SensitivityProfile | None, bits: int, compiled,
+              n_layers: int) -> np.ndarray:
+    """The ``(L, O)`` cost matrix a plan/ladder build should use for one
+    width's frontier: measured columns where the profile covered the
+    operator, the profile's linear model otherwise, uniform sensitivities
+    when there is no profile at all.  This is what lets a measured plan
+    keep pricing operators a fleet sweep lands *after* profiling."""
+    maes = np.array([comp.mae for _, comp in compiled])
+    if profile is None:
+        return np.ones(n_layers)[:, None] * maes[None, :]
+    assert profile.n_layers == n_layers, (
+        f"profile measured {profile.n_layers} layers, model has {n_layers}")
+    sens = profile.sensitivities(bits)
+    out = sens[:, None] * maes[None, :]
+    measured = profile.costs.get(int(bits))
+    if measured is not None:
+        keys, matrix = measured
+        col = {k: i for i, k in enumerate(keys)}
+        for o, (rec, _) in enumerate(compiled):
+            i = col.get(rec.key)
+            if i is not None:
+                out[:, o] = matrix[:, i]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def main(argv=None) -> None:
+    import argparse
+
+    import jax
+
+    from ..configs import get_config
+    from ..models import init_model
+
+    ap = argparse.ArgumentParser(
+        description="measure a per-layer sensitivity profile")
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--widths", default="4,8",
+                    help="comma-separated serving widths to profile")
+    ap.add_argument("--library", default=None,
+                    help="operator store; also measures the per-(layer, "
+                         "operator) cost matrix of each width's frontier")
+    ap.add_argument("--out", default=None,
+                    help="profile JSON path (default: "
+                         "<library>/_profiles/<arch>.json)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    out = args.out
+    if out is None:
+        if args.library is None:
+            raise SystemExit("--out is required without --library")
+        cfg_name = get_config(args.arch, reduced=args.reduced).name
+        out = default_profile_path(args.library, cfg_name)
+
+    cfg = get_config(args.arch, reduced=args.reduced).with_approx_mlp()
+    key = jax.random.PRNGKey(args.seed)
+    params = init_model(cfg, key)
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.seq), 0, cfg.vocab_size)}
+    widths = tuple(int(b) for b in args.widths.split(","))
+    profile = measure_profile(
+        cfg, params, batch, widths=widths, library=args.library,
+        meta={"arch": args.arch, "reduced": bool(args.reduced),
+              "seed": args.seed, "batch": args.batch, "seq": args.seq},
+    )
+    path = profile.save(out)
+
+    from ..launch.analysis import sensitivity_report
+
+    print(sensitivity_report(profile))
+    print(f"profile -> {path}")
+
+
+if __name__ == "__main__":
+    main()

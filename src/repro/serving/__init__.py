@@ -26,7 +26,17 @@ recompiling the decode step.
   document for the bench trajectory (``BENCH_serve.json``).
 * :mod:`repro.serving.loadgen` — deterministic synthetic request
   schedules (steady / ramp / spike) so the whole loop is testable on CPU
-  with ``--reduced``.
+  with ``--reduced``; requests carry a QoS-class tag (``class_mix``).
+
+Class-aware and mixed-width serving plug in from
+:mod:`repro.sensitivity`: a
+:class:`~repro.sensitivity.classes.ClassScheduler` gives every declared
+traffic tier its own queue and ladder level (per-batch LUT stacks, same
+single trace), an
+:class:`~repro.sensitivity.online.OnlineSensitivity` folds the shadow
+drift samples back into per-layer sensitivities, and a frozen per-layer
+``width_map`` serves one LUT stack per width group
+(:func:`repro.precision.plans.build_mixed_ladder`).
 """
 
 from .controller import ControllerConfig, PlanLadder, QoSController

@@ -53,12 +53,16 @@ class PlanLadder:
     """The frontier materialized as swap-ready levels.
 
     Holds the compiled operator list the plans index into, and caches each
-    level's stacked ``(L, 16, 16)`` LUT array so a swap re-stacks nothing.
+    level's stacked LUT array(s) so a swap re-stacks nothing.  ``stacker``
+    overrides how a plan materializes — the mixed-width ladder
+    (:func:`repro.precision.plans.build_mixed_ladder`) stacks one array
+    per width group instead of a single ``(L, side, side)`` array.
     """
 
     def __init__(self, compiled, plans: Sequence[LayerPlan],
                  exact_area: float, sensitivities: np.ndarray,
-                 requested_levels: int | None = None) -> None:
+                 requested_levels: int | None = None, *,
+                 stacker=None) -> None:
         assert plans, "ladder needs at least the all-exact plan"
         self.compiled = list(compiled)
         self.plans = list(plans)
@@ -68,7 +72,8 @@ class PlanLadder:
         # the request so a refresh against a denser frontier regains it
         self.requested_levels = (len(self.plans) if requested_levels is None
                                  else int(requested_levels))
-        self._stacks: dict[int, np.ndarray] = {}
+        self._stacker = stacker
+        self._stacks: dict[int, object] = {}
 
     @classmethod
     def build(cls, compiled, n_layers: int, *, exact_area: float,
@@ -86,21 +91,36 @@ class PlanLadder:
     def plan(self, level: int) -> LayerPlan:
         return self.plans[level]
 
-    def luts(self, level: int) -> np.ndarray:
+    def luts(self, level: int):
         stack = self._stacks.get(level)
         if stack is None:
-            stack = stack_luts(self.plans[level], self.compiled)
+            if self._stacker is not None:
+                stack = self._stacker(self.plans[level])
+            else:
+                stack = stack_luts(self.plans[level], self.compiled)
             self._stacks[level] = stack
         return stack
 
-    def refresh(self, compiled, exact_area: float) -> "PlanLadder":
+    def refresh(self, compiled, exact_area: float,
+                sensitivities=None) -> "PlanLadder":
         """Rebuild against a refreshed frontier, keeping the sensitivity
         model and the *originally requested* resolution — the watcher
         path (a denser frontier may now fill levels a sparse one
-        couldn't)."""
+        couldn't).  A ladder built on a measured ``(L, O)`` cost matrix
+        must be handed a re-priced ``sensitivities`` for the new frontier
+        (the serving engine derives one from its sensitivity profile);
+        the stale matrix would not line up with the refreshed operator
+        columns.  Mixed-width ladders refresh through
+        :func:`repro.precision.plans.build_mixed_ladder` instead (the
+        frozen width map and operator masks are not representable here)."""
+        assert self._stacker is None, (
+            "custom-stacked (mixed-width) ladders refresh via "
+            "precision.plans.build_mixed_ladder, not PlanLadder.refresh"
+        )
+        sens = self.sensitivities if sensitivities is None else sensitivities
         return PlanLadder.build(
-            compiled, len(self.sensitivities), exact_area=exact_area,
-            sensitivities=self.sensitivities, levels=self.requested_levels,
+            compiled, len(sens), exact_area=exact_area,
+            sensitivities=sens, levels=self.requested_levels,
         )
 
 

@@ -84,6 +84,8 @@ class ServingEngine:
         compiled=None,
         exact_area: float | None = None,
         sensitivities=None,
+        width_map=None,
+        sens_profile=None,
         warmup_caches: Callable | None = None,
     ) -> None:
         self.cfg = cfg
@@ -100,8 +102,23 @@ class ServingEngine:
         self._plan = plan
         self._compiled = list(compiled) if compiled is not None else []
         self._exact_area = exact_area
-        self._sens = (np.ones(cfg.n_layers) if sensitivities is None
-                      else np.asarray(sensitivities, dtype=np.float64))
+        # per-layer sensitivities: a vector for uniform-width serves, a
+        # {bits: vector-or-matrix} dict for mixed-width (kept for the
+        # watcher's ladder rebuild)
+        if isinstance(sensitivities, dict):
+            self._sens = sensitivities
+        else:
+            self._sens = (np.ones(cfg.n_layers) if sensitivities is None
+                          else np.asarray(sensitivities, dtype=np.float64))
+        self._width_map = (tuple(int(b) for b in width_map)
+                           if width_map is not None else None)
+        # measured SensitivityProfile (optional): refresh paths re-price
+        # measured cost matrices against the *refreshed* frontier through
+        # it — a stale (L, O) matrix cannot follow a frontier whose
+        # operator set a background fleet sweep just changed
+        self._profile = sens_profile
+        self._mae_by_key = {rec.key: comp.mae
+                            for rec, comp in self._compiled}
 
         step = decode_fn(cfg)
         if self._adaptive:
@@ -109,27 +126,49 @@ class ServingEngine:
                 "adaptive serving routes MLP matmuls through LUTs; build the "
                 "config with .with_approx_mlp()"
             )
-            self._luts = jnp.asarray(stack_luts(plan, self._compiled))
-            from ..precision.widths import exact_table, width_from_stack
+            if self._width_map is not None:
+                # mixed-width: one stack per width group, the per-layer
+                # width routing is a static part of the single trace
+                assert len(self._width_map) == cfg.n_layers
+                from ..precision.plans import (exact_mixed_stacks,
+                                               stack_mixed_luts)
 
-            # the exact shadow stack shares the live stack's width — a
-            # W8A8 serve shadows against the exact 256x256 product table
-            self.width = width_from_stack(self._luts)
-            side = self.width.side
-            self._exact_luts = jnp.asarray(np.broadcast_to(
-                exact_table("mul", self.width.bits).astype(np.int32),
-                (cfg.n_layers, side, side)).copy())
+                self._luts = {
+                    b: jnp.asarray(a) for b, a in stack_mixed_luts(
+                        plan, self._compiled, self._width_map).items()}
+                self._exact_luts = {
+                    b: jnp.asarray(a)
+                    for b, a in exact_mixed_stacks(self._width_map).items()}
+                self.width = None
+                self.widths = tuple(sorted(set(self._width_map)))
+            else:
+                self._luts = jnp.asarray(stack_luts(plan, self._compiled))
+                from ..precision.widths import exact_table, width_from_stack
+
+                # the exact shadow stack shares the live stack's width — a
+                # W8A8 serve shadows against the exact 256x256 product table
+                self.width = width_from_stack(self._luts)
+                self.widths = (self.width.bits,)
+                side = self.width.side
+                self._exact_luts = jnp.asarray(np.broadcast_to(
+                    exact_table("mul", self.width.bits).astype(np.int32),
+                    (cfg.n_layers, side, side)).copy())
+            wm = self._width_map
 
             def step_fn(params, caches, tok, pos, luts):
                 # python side effect runs once per *trace*, so this counts
                 # compilations, not calls — the no-retrace-across-swaps
                 # invariant is `trace_count == 1` after any number of swaps
                 self._trace_count += 1
+                if wm is not None:
+                    return step(cfg, params, caches, tok, pos, luts=luts,
+                                width_map=wm)
                 return step(cfg, params, caches, tok, pos, luts=luts)
         else:
             self._luts = None
             self._exact_luts = None
             self.width = None
+            self.widths = ()
 
             def step_fn(params, caches, tok, pos):
                 self._trace_count += 1
@@ -164,7 +203,8 @@ class ServingEngine:
         assert self._adaptive, "engine was built without a QoS plan"
         if plan.plan_id == self._plan.plan_id:
             return False
-        new = jnp.asarray(stack)
+        new = (dict((b, jnp.asarray(a)) for b, a in stack.items())
+               if isinstance(stack, dict) else jnp.asarray(stack))
         validate_lut_stack(self._luts, new)
         old_id = self._plan.plan_id
         self._plan, self._luts = plan, new
@@ -175,43 +215,142 @@ class ServingEngine:
         return True
 
     def refresh_library(self, compiled, exact_area: float, *,
-                        controller=None, reason: str = "library",
+                        controller=None, scheduler=None,
+                        reason: str = "library",
                         telemetry: Telemetry | None = None,
                         batch_idx: int = 0) -> bool:
         """Adopt a refreshed frontier (the watcher path).  With a
-        controller, its ladder is rebuilt and its current level re-stacked;
-        without one, the live plan's budget re-selects over the new
-        frontier via :func:`repro.library.qos.refresh_plan`.
+        controller (or class scheduler), its ladder is rebuilt and the
+        current level re-stacked; without either, the live plan's budget
+        re-selects over the new frontier via
+        :func:`repro.library.qos.refresh_plan`.
 
         Nothing — engine frontier, controller ladder — is mutated until the
         new stack passes :func:`~repro.library.qos.validate_lut_stack`
         inside :meth:`swap_plan`: a surprising store merge (e.g. a future
         8-bit frontier landing in a watched 4-bit store) raises and leaves
         the runtime serving consistently on the old plan."""
-        if controller is not None:
-            new_ladder = controller.ladder.refresh(compiled, exact_area)
-            level = min(controller.level, len(new_ladder) - 1)
+        # with a measured profile, re-price the refreshed frontier (a
+        # stale (L, O) matrix cannot index new operator columns); without
+        # one, the ladder keeps its own sensitivity model as before
+        new_sens = self._uniform_sens(compiled)
+        if controller is not None or scheduler is not None:
+            owner = (controller.ladder if controller is not None
+                     else scheduler.ladder)
+            new_ladder = owner.refresh(compiled, exact_area,
+                                       sensitivities=new_sens)
+            level = (min(controller.level, len(new_ladder) - 1)
+                     if controller is not None else 0)
             plan, stack = new_ladder.plan(level), new_ladder.luts(level)
         else:
             new_ladder = level = None
-            plan = refresh_plan(self._plan, compiled, self._sens,
-                                exact_area=exact_area)
+            plan = refresh_plan(
+                self._plan, compiled,
+                self._sens if new_sens is None else new_sens,
+                exact_area=exact_area)
             stack = stack_luts(plan, compiled)
         changed = self.swap_plan(plan, stack, reason=reason,
                                  telemetry=telemetry, batch_idx=batch_idx)
         self._compiled = list(compiled)
+        self._mae_by_key = {rec.key: comp.mae for rec, comp in self._compiled}
         self._exact_area = exact_area
         if controller is not None:
             controller.adopt(new_ladder, level=level)
+        if scheduler is not None:
+            scheduler.adopt(new_ladder)
         return changed
+
+    def refresh_mixed(self, mixed, *, controller=None, scheduler=None,
+                      reason: str = "library",
+                      telemetry: Telemetry | None = None,
+                      batch_idx: int = 0) -> bool:
+        """The mixed-width watcher path: rebuild the plan ladder over a
+        refreshed :class:`~repro.precision.plans.MixedFrontier` *inside*
+        the frozen width map, then re-point the controller and the class
+        scheduler at it.  Group shapes are fixed by the width map, so the
+        new level stacks validate against the live ones by construction —
+        and are checked anyway before anything is adopted."""
+        from ..precision.plans import (build_mixed_ladder,
+                                       mixed_cost_matrix, stack_mixed_luts)
+
+        assert self._width_map is not None, "engine serves a uniform width"
+        sens = self._mixed_sens(mixed)
+        old = (controller.ladder if controller is not None
+               else scheduler.ladder if scheduler is not None else None)
+        if old is None:
+            # plain mixed serve (no controller / classes): the analog of
+            # the refresh_plan path — re-select the live plan's budget
+            # inside the frozen width map and keep serving
+            wm = np.asarray(self._width_map)
+            plan = refresh_plan(
+                self._plan, mixed.compiled,
+                mixed_cost_matrix(mixed, sens, len(wm)),
+                exact_area=mixed.exact_areas(self._width_map),
+                allowed=mixed.op_bits[None, :] == wm[:, None])
+            stack = stack_mixed_luts(plan, mixed.compiled, self._width_map)
+        else:
+            new_ladder = build_mixed_ladder(
+                mixed, self._width_map, sens,
+                levels=old.requested_levels)
+            level = (min(controller.level, len(new_ladder) - 1)
+                     if controller is not None else 0)
+            plan, stack = new_ladder.plan(level), new_ladder.luts(level)
+        changed = self.swap_plan(plan, stack, reason=reason,
+                                 telemetry=telemetry, batch_idx=batch_idx)
+        self._compiled = list(mixed.compiled)
+        self._mae_by_key = {rec.key: comp.mae for rec, comp in self._compiled}
+        if old is not None and controller is not None:
+            controller.adopt(new_ladder, level=level)
+        if old is not None and scheduler is not None:
+            scheduler.adopt(new_ladder)
+        return changed
+
+    def _uniform_sens(self, compiled):
+        """Measured pricing for a refreshed uniform-width frontier, or
+        ``None`` when there is no profile (the caller keeps its own
+        sensitivity model)."""
+        if self._profile is None:
+            return None
+        from ..sensitivity.profile import costs_for
+
+        return costs_for(self._profile, self.width.bits, compiled,
+                         self.cfg.n_layers)
+
+    def _mixed_sens(self, mixed):
+        """Per-width pricing for a refreshed mixed frontier: measured via
+        the profile when present, else the constructor's sensitivity
+        model (vectors follow any frontier; a caller-supplied measured
+        matrix cannot, and the resulting ValueError makes the watcher
+        skip the refresh)."""
+        if self._profile is None:
+            return self._sens
+        from ..sensitivity.profile import costs_for
+
+        return {bits: costs_for(self._profile, bits, fr.compiled,
+                                self.cfg.n_layers)
+                for bits, fr in mixed.by_width.items()}
+
+    def _plan_maes(self, plan: LayerPlan) -> np.ndarray:
+        """Per-layer operator mae of a plan (0 for exact layers) — the
+        attribution vector the online sensitivity estimator consumes."""
+        return np.array([0.0 if c.key is None
+                         else self._mae_by_key.get(c.key, 0.0)
+                         for c in plan.choices])
 
     # ----------------------------------------------------------------- batch
     def run_batch(self, requests: list[Request], *,
-                  shadow: bool = False) -> BatchStats:
+                  shadow: bool = False, luts=None) -> BatchStats:
         """Serve one batch: prefill the prompts, greedily decode
         ``gen_len`` tokens.  Short batches are zero-padded to the fixed
-        batch size so every call reuses the single traced executable."""
+        batch size so every call reuses the single traced executable.
+
+        ``luts`` overrides the engine's live stack for this batch only —
+        the class-aware serve passes each batch its QoS class's plan
+        stack (same shapes, so still the one trace)."""
         assert 0 < len(requests) <= self.batch
+        if luts is not None:
+            luts = (dict((b, jnp.asarray(a)) for b, a in luts.items())
+                    if isinstance(luts, dict) else jnp.asarray(luts))
         prompts_np = np.zeros((self.batch, self.prompt_len), np.int32)
         for i, r in enumerate(requests):
             prompts_np[i] = r.tokens
@@ -225,7 +364,7 @@ class ServingEngine:
         logits = None
         for t in range(self.prompt_len):
             logits, caches = self._step(caches, prompts[:, t:t + 1],
-                                        jnp.int32(t))
+                                        jnp.int32(t), luts=luts)
         logits.block_until_ready()
         t1 = time.perf_counter()
 
@@ -248,7 +387,7 @@ class ServingEngine:
                     self._exact_luts)
                 shadow_logits.block_until_ready()
                 shadow_s = time.perf_counter() - ts
-            logits, caches = self._step(caches, tok, jnp.int32(t))
+            logits, caches = self._step(caches, tok, jnp.int32(t), luts=luts)
         logits.block_until_ready()
         t2 = time.perf_counter()
 
@@ -280,6 +419,8 @@ class ServingEngine:
         *,
         controller=None,
         watcher=None,
+        scheduler=None,
+        online=None,
         telemetry: Telemetry | None = None,
         seed: int = 0,
         on_batch_end: Callable[["ServingEngine", int], None] | None = None,
@@ -288,49 +429,122 @@ class ServingEngine:
         """Run the full serving loop over a synthetic load profile.
 
         Each tick's arrivals join the queue; the queue drains in batches
-        of up to ``batch`` requests.  After every batch the control plane
-        runs: watcher poll (library refresh), controller observe (plan
-        move), then the optional ``on_batch_end`` hook (tests use it to
-        mutate the store mid-serve)."""
+        of up to ``batch`` requests.  With a class ``scheduler``
+        (:class:`repro.sensitivity.classes.ClassScheduler`) there is one
+        queue per declared QoS class, drained in priority order, and each
+        batch decodes on *its class's* plan stack — same shapes, same
+        single trace, but ``gold`` rides a more exact level than
+        ``batch``.  After every batch the control plane runs: watcher
+        poll (library refresh), per-class drift bookkeeping, online
+        sensitivity update, controller observe (global level move), then
+        the optional ``on_batch_end`` hook (tests use it to mutate the
+        store mid-serve)."""
         assert profile.prompt_len == self.prompt_len
         assert profile.gen_len == self.gen_len
+        if scheduler is not None:
+            assert self._adaptive, "class-aware serving needs a QoS plan"
         telemetry = telemetry or Telemetry()
         if self._adaptive:
             telemetry.register_plan(self._plan)
         per_tick = synth_requests(profile, self.cfg.vocab_size, seed)
         queue: deque[Request] = deque()
+        queues: dict[str, deque[Request]] | None = None
+        if scheduler is not None:
+            queues = {name: deque() for name in scheduler.book.names}
+        # device-resident class stacks, keyed by ladder level and
+        # invalidated on ladder refresh — without this every class batch
+        # would re-upload its (n_layers, side, side) stack host-to-device
+        device_stacks: dict[int, object] = {}
+        device_ladder = None
         batch_idx = 0
         for tick in range(profile.n_ticks):
-            queue.extend(per_tick[tick])
-            while queue:
-                reqs = [queue.popleft()
-                        for _ in range(min(self.batch, len(queue)))]
-                backlog = len(queue)   # requests still waiting behind this batch
-                want_shadow = (controller is not None and self._adaptive
-                               and controller.wants_shadow(batch_idx))
-                stats = self.run_batch(reqs, shadow=want_shadow)
+            if queues is not None:
+                for r in per_tick[tick]:
+                    queues[scheduler.book.route(r.qos_class)].append(r)
+            else:
+                queue.extend(per_tick[tick])
+            while True:
+                # ---- next batch: priority class queue, or the one queue
+                if queues is not None:
+                    cls = next((n for n in scheduler.book.names
+                                if queues[n]), None)
+                    if cls is None:
+                        break
+                    q = queues[cls]
+                else:
+                    if not queue:
+                        break
+                    cls, q = None, queue
+                reqs = [q.popleft() for _ in range(min(self.batch, len(q)))]
+                backlog = (sum(len(x) for x in queues.values())
+                           if queues is not None else len(queue))
+
+                # ---- resolve this batch's plan --------------------------
+                if scheduler is not None:
+                    glevel = (controller.level if controller is not None
+                              else scheduler.top_level)
+                    level_c = scheduler.level_for(cls, glevel)
+                    plan_b = scheduler.ladder.plan(level_c)
+                    if scheduler.ladder is not device_ladder:
+                        device_stacks.clear()
+                        device_ladder = scheduler.ladder
+                    luts_b = device_stacks.get(level_c)
+                    if luts_b is None:
+                        raw = scheduler.ladder.luts(level_c)
+                        luts_b = (dict((b, jnp.asarray(a))
+                                       for b, a in raw.items())
+                                  if isinstance(raw, dict)
+                                  else jnp.asarray(raw))
+                        device_stacks[level_c] = luts_b
+                    telemetry.register_plan(plan_b)
+                else:
+                    glevel = level_c = None
+                    plan_b, luts_b = self._plan, None
+
+                # per-class cadence first (it counts the batch), then the
+                # controller's global cadence — no short-circuit, so a
+                # class's sampling never aliases with the drain order
+                sched_want = (scheduler is not None
+                              and scheduler.wants_shadow(cls))
+                ctrl_want = (controller is not None
+                             and controller.wants_shadow(batch_idx))
+                want_shadow = self._adaptive and (sched_want or ctrl_want)
+                stats = self.run_batch(reqs, shadow=want_shadow, luts=luts_b)
                 telemetry.record_batch(
                     batch=batch_idx, tick=tick, n_requests=stats.n_requests,
                     prefill_s=stats.prefill_s, decode_s=stats.decode_s,
                     prefill_tokens=stats.prefill_tokens,
                     decode_tokens=stats.decode_tokens,
                     decode_steps=stats.decode_steps,
-                    plan_id=self._plan.plan_id if self._adaptive else None,
-                    drift=stats.drift, backlog=backlog,
+                    plan_id=plan_b.plan_id if self._adaptive else None,
+                    drift=stats.drift, backlog=backlog, qos_class=cls,
                 )
+                if stats.drift is not None and self._adaptive:
+                    if scheduler is not None:
+                        scheduler.observe(cls, stats.drift)
+                    if online is not None:
+                        online.update(self._plan_maes(plan_b), stats.drift)
 
                 # ---- between-batch control plane ------------------------
                 if watcher is not None and self._adaptive and watcher.poll():
                     try:
-                        compiled, exact_area, _bits = watcher.load_frontier()
+                        fr = watcher.load_frontier()
                         # LookupError: store emptied; ValueError: refreshed
                         # stack would retrace (validate_lut_stack refused).
                         # Either way the server keeps running on the old,
                         # still-consistent plan.
-                        if self.refresh_library(
+                        if self._width_map is not None:
+                            changed = self.refresh_mixed(
+                                fr, controller=controller,
+                                scheduler=scheduler, telemetry=telemetry,
+                                batch_idx=batch_idx)
+                        else:
+                            compiled, exact_area, _bits = fr
+                            changed = self.refresh_library(
                                 compiled, exact_area, controller=controller,
-                                telemetry=telemetry, batch_idx=batch_idx
-                        ) and log:
+                                scheduler=scheduler, telemetry=telemetry,
+                                batch_idx=batch_idx)
+                        if changed and log:
                             log(f"batch {batch_idx}: library refresh -> "
                                 f"plan {self._plan.plan_id}")
                     except (LookupError, ValueError) as e:
@@ -343,16 +557,42 @@ class ServingEngine:
                     # building queue, not the step clock, is what says
                     # "trade accuracy for throughput" under ramp/spike load
                     eff_ms = stats.ms_per_step * (1.0 + backlog / self.batch)
-                    level = controller.observe(eff_ms, stats.drift)
+                    # with classes, the batch may have decoded below the
+                    # global level (its class cap) — its drift then says
+                    # nothing about the global operating point
+                    drift_sig = (stats.drift
+                                 if scheduler is None or level_c == glevel
+                                 else None)
+                    level = controller.observe(eff_ms, drift_sig)
                     if level is not None:
-                        moved = self.swap_plan(
-                            controller.plan, controller.luts(),
-                            reason=f"qos-{controller.last_reason}",
-                            telemetry=telemetry, batch_idx=batch_idx)
-                        if moved and log:
-                            log(f"batch {batch_idx}: controller -> level "
-                                f"{level} ({controller.last_reason}), plan "
-                                f"{self._plan.plan_id}")
+                        if scheduler is None:
+                            moved = self.swap_plan(
+                                controller.plan, controller.luts(),
+                                reason=f"qos-{controller.last_reason}",
+                                telemetry=telemetry, batch_idx=batch_idx)
+                            if moved and log:
+                                log(f"batch {batch_idx}: controller -> "
+                                    f"level {level} "
+                                    f"({controller.last_reason}), plan "
+                                    f"{self._plan.plan_id}")
+                        else:
+                            # the global operating point moved; per-class
+                            # stacks resolve against it at their next
+                            # batch.  glevel was read before a possible
+                            # mid-iteration ladder refresh — clamp both
+                            # levels to the ladder the swap log points at
+                            lad = scheduler.ladder
+                            telemetry.record_swap(
+                                batch=batch_idx,
+                                reason=f"qos-{controller.last_reason}",
+                                old=lad.plan(min(glevel,
+                                                 len(lad) - 1)).plan_id,
+                                new=lad.plan(min(level,
+                                                 len(lad) - 1)).plan_id)
+                            if log:
+                                log(f"batch {batch_idx}: controller -> "
+                                    f"global level {level} "
+                                    f"({controller.last_reason})")
                 if on_batch_end is not None:
                     on_batch_end(self, batch_idx)
                 batch_idx += 1

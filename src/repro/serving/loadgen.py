@@ -32,16 +32,24 @@ class Request:
     rid: int
     tokens: np.ndarray      # (prompt_len,) int32 prompt
     arrived_tick: int = 0
+    qos_class: str = "std"  # traffic tier (repro.sensitivity.classes)
 
 
 @dataclass(frozen=True)
 class LoadProfile:
-    """Arrivals per tick plus the (fixed) request geometry."""
+    """Arrivals per tick plus the (fixed) request geometry.
+
+    ``class_mix`` optionally tags each synthesized request with a QoS
+    class, drawn from the given ``((name, fraction), ...)`` distribution —
+    the fractions should sum to 1 (``repro.sensitivity.classes.parse_class_mix``
+    normalizes a CLI spec).  ``None`` keeps the legacy single-tier stream
+    bit-identical (no extra RNG draws happen)."""
 
     name: str
     arrivals: tuple[int, ...]
     prompt_len: int = 16
     gen_len: int = 32
+    class_mix: tuple[tuple[str, float], ...] | None = None
 
     @property
     def n_ticks(self) -> int:
@@ -53,41 +61,45 @@ class LoadProfile:
 
 
 def steady(ticks: int, per_tick: int, *, prompt_len: int = 16,
-           gen_len: int = 32) -> LoadProfile:
-    return LoadProfile("steady", (per_tick,) * ticks, prompt_len, gen_len)
+           gen_len: int = 32, class_mix=None) -> LoadProfile:
+    return LoadProfile("steady", (per_tick,) * ticks, prompt_len, gen_len,
+                       class_mix)
 
 
 def ramp(ticks: int, peak: int, *, prompt_len: int = 16,
-         gen_len: int = 32) -> LoadProfile:
+         gen_len: int = 32, class_mix=None) -> LoadProfile:
     """0 -> ``peak`` arrivals, linearly over ``ticks`` ticks."""
     arr = tuple(int(round(peak * (t + 1) / ticks)) for t in range(ticks))
-    return LoadProfile("ramp", arr, prompt_len, gen_len)
+    return LoadProfile("ramp", arr, prompt_len, gen_len, class_mix)
 
 
 def spike(ticks: int, base: int, peak: int, *, at: int | None = None,
           width: int | None = None, prompt_len: int = 16,
-          gen_len: int = 32) -> LoadProfile:
+          gen_len: int = 32, class_mix=None) -> LoadProfile:
     """``base`` arrivals with a ``peak`` burst of ``width`` ticks at ``at``."""
     at = ticks // 3 if at is None else at
     width = max(1, ticks // 4) if width is None else width
     arr = tuple(peak if at <= t < at + width else base for t in range(ticks))
-    return LoadProfile("spike", arr, prompt_len, gen_len)
+    return LoadProfile("spike", arr, prompt_len, gen_len, class_mix)
 
 
 PROFILES = ("steady", "ramp", "spike")
 
 
 def make_profile(kind: str, *, ticks: int, per_tick: int,
-                 prompt_len: int = 16, gen_len: int = 32) -> LoadProfile:
+                 prompt_len: int = 16, gen_len: int = 32,
+                 class_mix=None) -> LoadProfile:
     """CLI helper: one of :data:`PROFILES` at a given scale.  ``per_tick``
     is the steady rate / ramp peak / spike peak (spike base is 1)."""
     if kind == "steady":
-        return steady(ticks, per_tick, prompt_len=prompt_len, gen_len=gen_len)
+        return steady(ticks, per_tick, prompt_len=prompt_len, gen_len=gen_len,
+                      class_mix=class_mix)
     if kind == "ramp":
-        return ramp(ticks, per_tick, prompt_len=prompt_len, gen_len=gen_len)
+        return ramp(ticks, per_tick, prompt_len=prompt_len, gen_len=gen_len,
+                    class_mix=class_mix)
     if kind == "spike":
         return spike(ticks, 1, per_tick, prompt_len=prompt_len,
-                     gen_len=gen_len)
+                     gen_len=gen_len, class_mix=class_mix)
     raise ValueError(f"unknown load profile {kind!r}; known: {PROFILES}")
 
 
@@ -98,16 +110,29 @@ def synth_requests(profile: LoadProfile, vocab_size: int,
     :func:`repro.train.data.synth_batch`; the RNG is seeded per
     ``(seed, tick)`` and drawn sequentially within the tick, so the same
     profile + seed reproduces the stream bit-identically (changing a
-    tick's arrival count reshuffles only that tick's later prompts)."""
+    tick's arrival count reshuffles only that tick's later prompts).
+    With a ``class_mix``, QoS classes come from a *separate* RNG stream
+    (seeded per ``(seed, tick)`` with a class salt), so tagging traffic
+    never changes the token stream a profile would synthesize untagged."""
+    names = probs = None
+    if profile.class_mix:
+        names = [n for n, _ in profile.class_mix]
+        probs = np.asarray([f for _, f in profile.class_mix],
+                           dtype=np.float64)
+        probs = probs / probs.sum()
     out: list[list[Request]] = []
     rid = 0
     for tick, n in enumerate(profile.arrivals):
         rng = np.random.default_rng((seed, tick))
+        crng = np.random.default_rng((seed, tick, 0xC1A5))
         reqs = []
         for _ in range(n):
             ranks = rng.zipf(1.2, size=profile.prompt_len).astype(np.int64)
             tokens = np.minimum(ranks - 1, vocab_size - 1).astype(np.int32)
-            reqs.append(Request(rid=rid, tokens=tokens, arrived_tick=tick))
+            cls = (names[crng.choice(len(names), p=probs)]
+                   if names is not None else "std")
+            reqs.append(Request(rid=rid, tokens=tokens, arrived_tick=tick,
+                                qos_class=cls))
             rid += 1
         out.append(reqs)
     return out

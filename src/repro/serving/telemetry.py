@@ -34,6 +34,9 @@ class Telemetry:
         self._prefill_tokens = 0
         self._decode_tokens = 0
         self._decode_steps = 0
+        # per-QoS-class accumulators (class-aware serving); keys appear as
+        # classes are actually served, so a single-tier serve stays clean
+        self._classes: dict[str, dict] = {}
         self._t0 = time.time()
 
     # ------------------------------------------------------------------ write
@@ -55,7 +58,7 @@ class Telemetry:
                      prefill_s: float, decode_s: float, prefill_tokens: int,
                      decode_tokens: int, decode_steps: int,
                      plan_id: str | None, drift: float | None = None,
-                     backlog: int = 0) -> None:
+                     backlog: int = 0, qos_class: str | None = None) -> None:
         self.n_batches += 1
         self.n_requests += n_requests
         self._prefill_s += prefill_s
@@ -63,6 +66,21 @@ class Telemetry:
         self._prefill_tokens += prefill_tokens
         self._decode_tokens += decode_tokens
         self._decode_steps += decode_steps
+        if qos_class is not None:
+            c = self._classes.setdefault(qos_class, {
+                "batches": 0, "requests": 0, "decode_s": 0.0,
+                "decode_steps": 0, "decode_tokens": 0,
+                "drift_sum": 0.0, "drift_n": 0, "drift_max": 0.0,
+            })
+            c["batches"] += 1
+            c["requests"] += n_requests
+            c["decode_s"] += decode_s
+            c["decode_steps"] += decode_steps
+            c["decode_tokens"] += decode_tokens
+            if drift is not None:
+                c["drift_sum"] += float(drift)
+                c["drift_n"] += 1
+                c["drift_max"] = max(c["drift_max"], float(drift))
         self.events.append({
             "batch": batch,
             "tick": tick,
@@ -79,6 +97,7 @@ class Telemetry:
             "plan": plan_id,
             "drift": None if drift is None else round(float(drift), 6),
             "backlog": backlog,
+            "class": qos_class,
         })
 
     def record_swap(self, *, batch: int, reason: str, old: str | None,
@@ -99,6 +118,22 @@ class Telemetry:
         reasons: dict[str, int] = {}
         for s in self.swaps:
             reasons[s["reason"]] = reasons.get(s["reason"], 0) + 1
+        classes = {}
+        for name, c in self._classes.items():
+            classes[name] = {
+                "batches": c["batches"],
+                "requests": c["requests"],
+                "decode_tok_s": round(c["decode_tokens"] / c["decode_s"], 2)
+                if c["decode_s"] else 0.0,
+                "ms_per_step": round(1e3 * c["decode_s"] /
+                                     c["decode_steps"], 3)
+                if c["decode_steps"] else 0.0,
+                "mean_drift": round(c["drift_sum"] / c["drift_n"], 6)
+                if c["drift_n"] else None,
+                "max_drift": round(c["drift_max"], 6)
+                if c["drift_n"] else None,
+                "drift_samples": c["drift_n"],
+            }
         return {
             "batches": self.n_batches,
             "requests": self.n_requests,
@@ -113,6 +148,7 @@ class Telemetry:
             "swaps": self.swap_count,
             "swaps_by_reason": reasons,
             "plans_used": len(self.plans),
+            **({"classes": classes} if classes else {}),
         }
 
     def dump(self, path: str | Path) -> dict:

@@ -28,13 +28,20 @@ __all__ = ["LibraryWatcher"]
 class LibraryWatcher:
     def __init__(self, library, *, min_poll_s: float = 2.0,
                  target_bits: int | None = None,
+                 widths: tuple[int, ...] | None = None,
                  clock: Callable[[], float] = time.monotonic) -> None:
         self.library = library
         self.store = OperatorStore(library)
         # the serving width is sticky across refreshes: a W8A8 serve must
         # reload the *8-bit composed* frontier, or every refresh would be
-        # refused by the stack validator (16x16 vs 256x256)
+        # refused by the stack validator (16x16 vs 256x256).  A
+        # mixed-width serve pins the whole width set instead and reloads
+        # a merged MixedFrontier (the engine rebuilds its ladder inside
+        # the frozen width map).
+        assert target_bits is None or widths is None, \
+            "target_bits (uniform) and widths (mixed) are exclusive"
         self.target_bits = target_bits
+        self.widths = tuple(int(b) for b in widths) if widths else None
         self.min_poll_s = float(min_poll_s)
         self._clock = clock
         self._token = self.store.version_token()
@@ -61,10 +68,15 @@ class LibraryWatcher:
     def load_frontier(self):
         """(compiled frontier, exact_area, bits) of the refreshed store —
         the triple every plan-refresh path consumes, compiled at the
-        watcher's serving width.  Raises :class:`LookupError` if the
-        store lost its multipliers (the caller keeps serving on the old
-        plan)."""
+        watcher's serving width — or, for a mixed-width watcher, the
+        merged :class:`~repro.precision.plans.MixedFrontier`.  Raises
+        :class:`LookupError` if the store lost its multipliers (the
+        caller keeps serving on the old plan)."""
+        self.refreshes += 1
+        if self.widths is not None:
+            from ..precision.plans import load_mixed_frontier
+
+            return load_mixed_frontier(self.library, self.widths)
         from ..library.compile import load_mul_frontier
 
-        self.refreshes += 1
         return load_mul_frontier(self.library, target_bits=self.target_bits)

@@ -1,0 +1,475 @@
+"""repro.sensitivity: profiler determinism, online-EWMA convergence,
+class-budget isolation, mixed-width plan/stack validation, and the
+end-to-end class-aware mixed-width serve with a single decode trace."""
+
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.arith import benchmark
+from repro.core.circuits import Circuit, Op
+from repro.core.synth import area
+from repro.library import OperatorSignature, OperatorStore, select_plan
+from repro.library.qos import validate_lut_stack
+from repro.precision.plans import (
+    build_mixed_ladder,
+    choose_mixed_budget,
+    exact_mixed_stacks,
+    group_layers,
+    load_mixed_frontier,
+    mixed_comparison,
+    select_width_map,
+    width_of_key,
+)
+from repro.precision.widths import exact_table
+from repro.sensitivity import (
+    ClassBook,
+    ClassScheduler,
+    OnlineSensitivity,
+    parse_class_mix,
+)
+from repro.sensitivity.profile import (
+    SensitivityProfile,
+    costs_for,
+    truncation_probe,
+)
+from repro.serving.loadgen import make_profile, synth_requests
+
+
+# ---------------------------------------------------------------------------
+# handcrafted operators: a deterministic two-width frontier
+# ---------------------------------------------------------------------------
+def trunc_mul2() -> Circuit:
+    """Exact low 2 product bits, upper bits dropped."""
+    c = Circuit.empty(4, "trunc_mul2")
+    a0, a1, b0, b1 = 0, 1, 2, 3
+    p0 = c.add(Op.AND, a0, b0)
+    p1 = c.add(Op.XOR, c.add(Op.AND, a1, b0), c.add(Op.AND, a0, b1))
+    z = c.const(False)
+    for out in (p0, p1, z, z):
+        c.mark_output(out)
+    return c
+
+
+def trunc_mul4() -> Circuit:
+    """The exact 4-bit multiplier with its two low product bits zeroed."""
+    c = copy.deepcopy(benchmark("mul_i8"))
+    c.name = "trunc_mul4"
+    z = c.const(False)
+    c.outputs[0] = z
+    c.outputs[1] = z
+    return c
+
+
+@pytest.fixture()
+def mixed_library(tmp_path):
+    """One 4-bit block (modest saving, low error) + one 2-bit block (tiny
+    area, coarse): the native frontier holds the 4-bit block, the
+    composed W8A8 frontier prices both — a real two-width trade."""
+    root = tmp_path / "lib"
+    store = OperatorStore(root)
+    a4 = area(benchmark("mul_i8"))
+    t4 = trunc_mul4()
+    exact4 = benchmark("mul_i8").eval_words().astype(np.int64)
+    w4 = int(np.abs(t4.eval_words().astype(np.int64) - exact4).max())
+    store.put_circuit(t4, OperatorSignature("mul", 4, "wce", max(1, w4)),
+                      area=0.6 * a4, source="test")
+    t2 = trunc_mul2()
+    exact2 = benchmark("mul_i4").eval_words().astype(np.int64)
+    w2 = int(np.abs(t2.eval_words().astype(np.int64) - exact2).max())
+    store.put_circuit(t2, OperatorSignature("mul", 2, "wce", max(1, w2)),
+                      area=2.0, source="test")
+    return root
+
+
+# ---------------------------------------------------------------------------
+# probes / offline profile
+# ---------------------------------------------------------------------------
+def test_truncation_probe_deterministic_and_sound():
+    for bits in (4, 8):
+        p1 = truncation_probe(bits)
+        p2 = truncation_probe(bits)
+        np.testing.assert_array_equal(p1.lut, p2.lut)
+        assert p1.mae == p2.mae > 0
+        side = 1 << bits
+        assert p1.lut.shape == (side, side)
+        # truncation keeps the high product bits exact
+        exact = exact_table("mul", bits)
+        assert ((exact - p1.lut) >= 0).all()
+        assert ((exact - p1.lut) < (1 << p1.drop)).all()
+
+
+@pytest.fixture(scope="module")
+def reduced_model():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models import init_model
+
+    cfg = get_config("gemma3-1b", reduced=True).with_approx_mlp()
+    key = jax.random.PRNGKey(0)
+    params = init_model(cfg, key)
+    batch = {"tokens": jax.random.randint(key, (2, 8), 0, cfg.vocab_size)}
+    return cfg, params, batch
+
+
+def test_profile_deterministic_and_roundtrips(reduced_model, tmp_path):
+    from repro.sensitivity.profile import load_profile, measure_profile
+
+    cfg, params, batch = reduced_model
+    p1 = measure_profile(cfg, params, batch, widths=(4,))
+    p2 = measure_profile(cfg, params, batch, widths=(4,))
+    np.testing.assert_array_equal(p1.sens[4], p2.sens[4])
+    assert (p1.sens[4] > 0).all()
+
+    path = p1.save(tmp_path / "prof.json")
+    back = load_profile(path)
+    assert back.model == cfg.name and back.n_layers == cfg.n_layers
+    np.testing.assert_allclose(back.sens[4], p1.sens[4])
+    # the JSON document is plain data (re-serializable)
+    json.loads(path.read_text())
+
+
+def test_profile_measures_frontier_cost_matrix(reduced_model, mixed_library):
+    from repro.library.compile import load_mul_frontier
+    from repro.sensitivity.profile import measure_profile
+
+    cfg, params, batch = reduced_model
+    prof = measure_profile(cfg, params, batch, widths=(4,),
+                           library=mixed_library)
+    keys, matrix = prof.costs[4]
+    compiled, _, _ = load_mul_frontier(mixed_library)
+    assert keys == [rec.key for rec, _ in compiled]
+    assert matrix.shape == (cfg.n_layers, len(compiled))
+    assert (matrix >= 0).all()
+
+    # costs_for: measured columns for known keys, linear fallback otherwise
+    costs = costs_for(prof, 4, compiled, cfg.n_layers)
+    np.testing.assert_allclose(costs, matrix)
+    import dataclasses
+
+    fake = [(dataclasses.replace(rec, key="unseen"), comp)
+            for rec, comp in compiled]
+    lin = costs_for(prof, 4, fake, cfg.n_layers)
+    np.testing.assert_allclose(
+        lin, prof.sens[4][:, None]
+        * np.array([c.mae for _, c in compiled])[None, :])
+
+
+# ---------------------------------------------------------------------------
+# online estimator
+# ---------------------------------------------------------------------------
+def test_online_converges_to_offline_on_synthetic_drift():
+    true = np.array([4.0, 1.0, 0.25])
+    est = OnlineSensitivity(3, alpha=0.5)
+    # varied plans (the controller/class traffic walking the ladder):
+    # each sample's drift is the offline model's prediction for that plan
+    plans = [np.array([0.5, 0.0, 0.0]),      # layer-isolating samples
+             np.array([0.0, 0.5, 0.0]),
+             np.array([0.0, 0.0, 0.5]),
+             np.array([0.5, 0.5, 0.5])]      # and a joint one
+    for _ in range(12):
+        for maes in plans:
+            est.update(maes, float((true * maes).sum()))
+    np.testing.assert_allclose(est.sensitivities(), true, rtol=1e-3)
+    assert est.n_updates == 48
+
+
+def test_online_ignores_exact_samples_and_seeds_from_profile():
+    prof = SensitivityProfile(model="m", n_layers=2,
+                              sens={4: np.array([2.0, 0.5]),
+                                    8: np.array([1.0, 1.0])})
+    est = OnlineSensitivity.from_profile(prof, 4)
+    np.testing.assert_allclose(est.sensitivities(), [2.0, 0.5])
+    est.update(np.zeros(2), 123.0)          # all-exact: no signal
+    assert est.n_updates == 0
+    np.testing.assert_allclose(est.sensitivities(), [2.0, 0.5])
+    mixed = OnlineSensitivity.from_profile(prof, None, width_map=(4, 8))
+    np.testing.assert_allclose(mixed.sensitivities(), [2.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# QoS classes
+# ---------------------------------------------------------------------------
+def test_classbook_parse_priority_and_routing():
+    book = ClassBook.parse("gold:0.02,std:0.05,batch:0.2")
+    assert book.names == ("gold", "std", "batch")     # listed order drains
+    assert book.get("gold").drift_budget == 0.02
+    assert book.route("std") == "std"
+    assert book.route("nosuch") == "batch"            # best-effort tier
+    with pytest.raises(ValueError, match="bad class spec"):
+        ClassBook.parse("gold=0.02")
+    mix = parse_class_mix("gold:1,batch:3")
+    assert mix == (("gold", 0.25), ("batch", 0.75))
+
+
+def test_loadgen_class_mix_tags_without_touching_tokens():
+    p_plain = make_profile("steady", ticks=3, per_tick=8, prompt_len=6,
+                           gen_len=2)
+    p_mix = make_profile("steady", ticks=3, per_tick=8, prompt_len=6,
+                         gen_len=2,
+                         class_mix=(("gold", 0.25), ("batch", 0.75)))
+    r_plain = synth_requests(p_plain, vocab_size=64, seed=7)
+    r_mix = synth_requests(p_mix, vocab_size=64, seed=7)
+    flat_p = [r for tick in r_plain for r in tick]
+    flat_m = [r for tick in r_mix for r in tick]
+    for a, b in zip(flat_p, flat_m):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert a.qos_class == "std"
+    classes = {r.qos_class for r in flat_m}
+    assert classes <= {"gold", "batch"} and len(classes) == 2
+    # deterministic tagging
+    r_mix2 = synth_requests(p_mix, vocab_size=64, seed=7)
+    assert [r.qos_class for tick in r_mix2 for r in tick] == \
+        [r.qos_class for r in flat_m]
+
+
+def _toy_ladder(preds):
+    """A stand-in ladder: only .plans[i].predicted_total and len() are
+    read by the scheduler's cap computation."""
+    class P:
+        def __init__(self, t):
+            self.predicted_total = t
+
+    class Ladder:
+        def __init__(self):
+            self.plans = [P(t) for t in preds]
+
+        def __len__(self):
+            return len(self.plans)
+    return Ladder()
+
+
+def test_class_budget_isolation():
+    """Tightening ``batch`` (budget or measured backoff) never changes
+    ``gold``'s level — the per-class state is disjoint."""
+    ladder = _toy_ladder([0.0, 0.01, 0.1, 1.0])
+    loose = ClassScheduler(ClassBook.parse("gold:0.05,batch:2.0"), ladder)
+    tight = ClassScheduler(ClassBook.parse("gold:0.05,batch:0.005"), ladder)
+    for g in range(4):
+        assert loose.level_for("gold", g) == tight.level_for("gold", g)
+    assert tight.cap("batch") < loose.cap("batch")
+
+    # measured overruns on batch back off batch only
+    before = loose.level_for("gold", 3)
+    for _ in range(5):
+        loose.observe("batch", 100.0)
+    assert loose.level_for("gold", 3) == before
+    assert loose.cap("batch") < 3
+
+    # and gold's own overrun does not touch batch
+    batch_cap = tight.cap("batch")
+    tight.observe("gold", 1.0)
+    assert tight.cap("batch") == batch_cap
+
+
+def test_class_scheduler_caps_and_relax():
+    ladder = _toy_ladder([0.0, 0.01, 0.1, 1.0])
+    book = ClassBook.parse("gold:0.05,batch:2.0")
+    s = ClassScheduler(book, ladder, relax_patience=2)
+    assert s.cap("gold") == 1 and s.cap("batch") == 3
+    assert s.level_for("gold", 3) == 1       # global level capped
+    assert s.level_for("batch", 2) == 2      # global level binds
+    assert s.observe("batch", 50.0)          # overrun: tighten
+    assert s.cap("batch") == 2
+    for _ in range(2):
+        s.observe("batch", 0.0)              # sustained headroom: relax
+    assert s.cap("batch") == 3
+
+
+def test_class_shadow_cadence_is_per_class():
+    """Shadow sampling counts each class's own batches — a class that
+    always lands on odd global batch indices still gets measured."""
+    ladder = _toy_ladder([0.0, 1.0])
+    s = ClassScheduler(ClassBook.parse("gold:1,batch:1"), ladder,
+                       shadow_every=2)
+    # interleaved drain: gold, batch, gold, batch, ...
+    got = [(name, s.wants_shadow(name))
+           for name in ("gold", "batch") * 3]
+    assert got == [("gold", True), ("batch", True),
+                   ("gold", False), ("batch", False),
+                   ("gold", True), ("batch", True)]
+
+
+def test_class_spec_validation_raises():
+    with pytest.raises(ValueError, match="negative drift budget"):
+        ClassBook.parse("gold:-0.1")
+    with pytest.raises(ValueError, match="duplicate"):
+        ClassBook.parse("gold:0.1,gold:0.2")
+    with pytest.raises(ValueError, match="negative fraction"):
+        parse_class_mix("gold:-1,std:2")
+    with pytest.raises(ValueError, match="sums to 0"):
+        parse_class_mix("gold:0,std:0")
+
+
+# ---------------------------------------------------------------------------
+# allowed-mask selection (library.qos generalization)
+# ---------------------------------------------------------------------------
+def test_select_plan_respects_allowed_mask(mixed_library):
+    mixed = load_mixed_frontier(mixed_library)
+    costs = np.ones((3, len(mixed.compiled)))
+    allowed = np.zeros((3, len(mixed.compiled)), dtype=bool)
+    allowed[:, 0] = True                     # only the first operator
+    plan = select_plan(mixed.compiled, costs, 1e9,
+                       exact_area=mixed.exact_area(4), allowed=allowed)
+    keys = {c.key for c in plan.choices}
+    assert keys <= {None, mixed.compiled[0][0].key}
+
+
+# ---------------------------------------------------------------------------
+# mixed-width plans
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def mixed_setup(mixed_library):
+    mixed = load_mixed_frontier(mixed_library)
+    n_layers = 4
+    # layer 0 is 10x more sensitive: it must stay on the native tile
+    sens = {b: np.array([10.0, 1.0, 1.0, 1.0]) for b in mixed.widths}
+    return mixed, sens, n_layers
+
+
+def test_mixed_plan_beats_best_uniform_at_equal_budget(mixed_setup):
+    """The acceptance pin: at the auto-chosen budget the mixed plan uses
+    both widths and its composed area is *strictly* below the best
+    uniform-width plan's."""
+    mixed, sens, L = mixed_setup
+    budget = choose_mixed_budget(mixed, sens, L)
+    report, width_map, plan = mixed_comparison(mixed, sens, budget, L)
+    assert set(width_map) == {4, 8}
+    assert report["mixed_area"] < report["best_uniform_area"]
+    assert report["mixed_area"] == pytest.approx(plan.total_area)
+    # the sensitive layer kept its native tile
+    assert width_map[0] == 4
+    assert plan.predicted_total <= budget
+
+
+def test_width_map_and_stacks(mixed_setup):
+    mixed, sens, L = mixed_setup
+    budget = choose_mixed_budget(mixed, sens, L)
+    width_map, plan = select_width_map(mixed, sens, budget, L)
+    for c in plan.choices:
+        assert width_of_key(c.key, mixed.native_bits) == width_map[c.layer]
+    ladder = build_mixed_ladder(mixed, width_map, sens, levels=4)
+    stacks = ladder.luts(len(ladder) - 1)
+    assert set(stacks) == set(width_map)
+    for bits, arr in stacks.items():
+        side = 1 << bits
+        assert arr.shape == (len(group_layers(width_map, bits)), side, side)
+        assert arr.dtype == np.int32
+    # level 0 is all-exact: group stacks equal the exact mixed stacks
+    exact = exact_mixed_stacks(width_map)
+    for bits, arr in ladder.luts(0).items():
+        np.testing.assert_array_equal(arr, exact[bits])
+
+
+def test_mixed_ladder_monotone_and_width_frozen(mixed_setup):
+    mixed, sens, L = mixed_setup
+    budget = choose_mixed_budget(mixed, sens, L)
+    width_map, _ = select_width_map(mixed, sens, budget, L)
+    ladder = build_mixed_ladder(mixed, width_map, sens, levels=4)
+    areas = [p.total_area for p in ladder.plans]
+    drifts = [p.predicted_total for p in ladder.plans]
+    assert all(a > b for a, b in zip(areas, areas[1:])), areas
+    assert all(a <= b for a, b in zip(drifts, drifts[1:])), drifts
+    # every level's non-exact choices stay inside the frozen width map
+    for p in ladder.plans:
+        for c in p.choices:
+            if c.key is not None:
+                assert width_of_key(c.key) == width_map[c.layer]
+
+
+def test_validate_lut_stack_mixed_groups():
+    a = {4: np.zeros((2, 16, 16), np.int32),
+         8: np.zeros((1, 256, 256), np.int32)}
+    b = {4: np.ones((2, 16, 16), np.int32),
+         8: np.ones((1, 256, 256), np.int32)}
+    validate_lut_stack(a, b)                  # same groups: fine
+    with pytest.raises(ValueError, match="width map is frozen"):
+        validate_lut_stack(a, {4: a[4]})      # a group vanished
+    with pytest.raises(ValueError, match="refusing"):
+        validate_lut_stack(a, {4: a[4], 8: np.zeros((2, 256, 256),
+                                                    np.int32)})
+    with pytest.raises(ValueError, match="width map is frozen"):
+        validate_lut_stack(a[4], b)           # uniform vs mixed
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: class-aware mixed-width adaptive serve, one trace
+# ---------------------------------------------------------------------------
+def zero_mul2() -> Circuit:
+    """Constant-zero 2-bit multiplier — a mid-serve fleet arrival."""
+    c = Circuit.empty(4, "zero_mul2")
+    z = c.const(False)
+    for _ in range(4):
+        c.mark_output(z)
+    return c
+
+
+def test_e2e_mixed_class_serve_single_trace(mixed_library):
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.serving import (ControllerConfig, LibraryWatcher,
+                               QoSController, ServingEngine, Telemetry,
+                               steady)
+
+    mixed = load_mixed_frontier(mixed_library)
+    cfg = get_config("gemma3-1b", reduced=True).with_approx_mlp()
+    L = cfg.n_layers
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    sens_vecs = {b: np.array([10.0] + [1.0] * (L - 1))
+                 for b in mixed.widths}
+    # a measured profile (linear model only): the engine re-prices the
+    # refreshed frontier through it when the watcher fires mid-serve
+    prof = SensitivityProfile(model=cfg.name, n_layers=L, sens=sens_vecs)
+    budget = choose_mixed_budget(mixed, sens_vecs, L)
+    width_map, _ = select_width_map(mixed, sens_vecs, budget, L)
+    assert set(width_map) == {4, 8}
+    ladder = build_mixed_ladder(mixed, width_map, sens_vecs, levels=4)
+
+    book = ClassBook.parse("gold:1.0,batch:1e9")
+    scheduler = ClassScheduler(book, ladder, shadow_every=1)
+    ctrl = QoSController(ladder, ControllerConfig(
+        target_ms_per_step=1e-6, drift_budget=1e9, patience=1, cooldown=0,
+        shadow_every=1, ewma_alpha=1.0))
+    online = OnlineSensitivity(L)
+    watcher = LibraryWatcher(mixed_library, min_poll_s=0.0,
+                             widths=mixed.widths)
+    store = OperatorStore(mixed_library)
+
+    def densify_midrun(engine, batch_idx):
+        if batch_idx == 1:   # a background fleet sweep lands a cheaper op
+            circ = zero_mul2()
+            store.put_circuit(circ, OperatorSignature("mul", 2, "wce", 9),
+                              area=area(circ), source="fleet")
+
+    engine = ServingEngine(cfg, params, batch=2, prompt_len=4, gen_len=4,
+                           plan=ladder.plan(0), compiled=mixed.compiled,
+                           sensitivities=sens_vecs, width_map=width_map,
+                           sens_profile=prof)
+    profile = steady(4, 3, prompt_len=4, gen_len=4,
+                     class_mix=(("gold", 0.5), ("batch", 0.5)))
+    tel = engine.serve(profile, controller=ctrl, scheduler=scheduler,
+                       watcher=watcher, online=online,
+                       telemetry=Telemetry(), on_batch_end=densify_midrun)
+
+    # one trace across every class stack, controller move and refresh
+    assert engine.trace_count == 1
+    s = tel.summary()
+    classes = s["classes"]
+    assert set(classes) == {"gold", "batch"}
+    for name, row in classes.items():
+        assert row["drift_samples"] >= 1
+        assert row["mean_drift"] <= book.get(name).drift_budget
+    # gold decodes more exactly than batch in the same serve
+    assert classes["gold"]["mean_drift"] <= classes["batch"]["mean_drift"]
+    # the load-driven controller walked the global ladder
+    assert any(r.startswith("qos-") for r in s["swaps_by_reason"])
+    # the mid-serve store put was picked up: the scheduler's ladder now
+    # prices the composed arrival (refresh survived the changed operator
+    # count because the engine re-priced through its profile)
+    assert watcher.refreshes >= 1
+    assert len(scheduler.ladder.compiled) > len(mixed.compiled)
+    # online estimator folded the shadow samples in
+    assert online.n_updates >= 1
