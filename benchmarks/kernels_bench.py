@@ -2,20 +2,21 @@
 Pallas kernels themselves are TPU-targeted and validated in interpret
 mode, so what we time here is the semantic workload).
 
-``--json BENCH_kernels.json`` additionally dumps the rows as structured
-JSON — the bench trajectory CI tracks alongside ``BENCH_serve.json``.
-The LUT-matmul rows are decode-step shaped (M tokens through a K x N
-projection) and report tokens/s and ms/step at both serving widths, so
-the 4-bit-vs-8-bit cost of routing a model through searched operators is
-one diff away.
+Per-iteration timings land in a :class:`repro.obs.metrics.MetricRegistry`
+histogram per kernel, and the JSON the trajectory CI tracks
+(``--json BENCH_kernels.json``) is a view over that registry — the rows
+carry p50/p95 across iterations next to the mean, and the file is written
+with the same atomic ``os.replace`` discipline as every other bench
+artifact.  The LUT-matmul rows are decode-step shaped (M tokens through a
+K x N projection) and report tokens/s and ms/step at both serving widths,
+so the 4-bit-vs-8-bit cost of routing a model through searched operators
+is one diff away.
 """
 
 from __future__ import annotations
 
 import argparse
-import json
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -24,18 +25,40 @@ import numpy as np
 from repro.core.arith import benchmark
 from repro.core.circuits import input_truth_tables
 from repro.kernels import ops
+from repro.obs.export import write_bench_json
+from repro.obs.metrics import MetricRegistry, get_registry
+
+# per-iteration kernel latency in microseconds, sub-ms to multi-second
+US_BUCKETS = (10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1e3, 2.5e3, 5e3,
+              1e4, 2.5e4, 5e4, 1e5, 2.5e5, 5e5, 1e6, 5e6)
 
 
-def _time(fn, *args, iters=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(*args).block_until_ready()
-    t0 = time.time()
+def _time(fn, *args, iters=5, hist=None) -> float:
+    """Mean per-call microseconds; every timed iteration is also observed
+    into ``hist`` so the JSON can state iteration spread, not just mean."""
+    out = fn(*args)
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    total_us = 0.0
     for _ in range(iters):
+        t0 = time.time()
         out = fn(*args)
         (out[0] if isinstance(out, tuple) else out).block_until_ready()
-    return (time.time() - t0) / iters * 1e6  # us
+        dt_us = (time.time() - t0) * 1e6
+        total_us += dt_us
+        if hist is not None:
+            hist.observe(dt_us)
+    return total_us / iters
 
 
-def main(rows: list | None = None) -> list[tuple[str, float, str]]:
+def main(rows: list | None = None,
+         registry: MetricRegistry | None = None
+         ) -> list[tuple[str, float, str]]:
+    registry = registry if registry is not None else get_registry()
+
+    def hist(name: str):
+        return registry.histogram("kernel_iter_us", buckets=US_BUCKETS,
+                                  kernel=name)
+
     rng = np.random.default_rng(0)
     out = []
 
@@ -47,7 +70,7 @@ def main(rows: list | None = None) -> list[tuple[str, float, str]]:
     lits = jnp.asarray(rng.integers(0, 3, size=(P, T, 8)), dtype=jnp.int32)
     sel = jnp.asarray((rng.random((P, 8, T)) < 0.4), dtype=jnp.int32)
     f = jax.jit(lambda l, s: ops.template_eval(l, s, in_tt, ev, backend="ref"))
-    us = _time(f, lits, sel)
+    us = _time(f, lits, sel, hist=hist("template_eval_8k_pop"))
     out.append(("template_eval_8k_pop", us, f"{P/(us/1e6):.0f} cands/s"))
 
     # approx_matmul: LUT matmul vs float matmul
@@ -56,7 +79,7 @@ def main(rows: list | None = None) -> list[tuple[str, float, str]]:
     b = jnp.asarray(rng.integers(0, 16, (K, N)), dtype=jnp.int32)
     lut = jnp.asarray(rng.integers(0, 226, (16, 16)), dtype=jnp.int32)
     f = jax.jit(lambda x, y: ops.approx_matmul(x, y, lut, backend="ref"))
-    us = _time(f, a, b)
+    us = _time(f, a, b, hist=hist(f"approx_matmul_{M}"))
     gflops = 2 * M * K * N / (us / 1e6) / 1e9
     out.append((f"approx_matmul_{M}", us, f"{gflops:.2f} eq-GFLOP/s"))
 
@@ -73,8 +96,9 @@ def main(rows: list | None = None) -> list[tuple[str, float, str]]:
         bw = jnp.asarray(rng.integers(0, side, (Kd, Nd)), dtype=jnp.int32)
         f = jax.jit(lambda x, y, t=table: ops.approx_matmul(
             x, y, t, backend="ref"))
-        us = _time(f, aw, bw)
-        out.append((f"lut_matmul_w{bits}_tok{Mt}", us,
+        name = f"lut_matmul_w{bits}_tok{Mt}"
+        us = _time(f, aw, bw, hist=hist(name))
+        out.append((name, us,
                     f"{Mt / (us / 1e6):.0f} tok/s, {us / 1e3:.3f} ms/step"))
 
     # flash_attention reference path
@@ -82,7 +106,7 @@ def main(rows: list | None = None) -> list[tuple[str, float, str]]:
     k = jnp.asarray(rng.standard_normal((1, 2, 1024, 64)), dtype=jnp.bfloat16)
     v = jnp.asarray(rng.standard_normal((1, 2, 1024, 64)), dtype=jnp.bfloat16)
     f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, backend="ref"))
-    us = _time(f, q, k, v)
+    us = _time(f, q, k, v, hist=hist("attention_1k_gqa"))
     out.append(("attention_1k_gqa", us, "B1 H8 L1024 D64"))
 
     if rows is not None:
@@ -90,12 +114,20 @@ def main(rows: list | None = None) -> list[tuple[str, float, str]]:
     return out
 
 
-def rows_to_json(rows: list[tuple[str, float, str]]) -> dict:
-    """Structured view of the bench rows: microseconds plus the derived
-    per-step numbers for the LUT-matmul width rows."""
+def rows_to_json(rows: list[tuple[str, float, str]],
+                 registry: MetricRegistry | None = None) -> dict:
+    """Structured view of the bench rows: mean microseconds, iteration
+    p50/p95 from the registry histograms, plus the derived per-step
+    numbers for the LUT-matmul width rows."""
     doc: dict = {}
     for name, us, note in rows:
         entry: dict = {"us": round(us, 3), "note": note}
+        if registry is not None:
+            h = registry.find("kernel_iter_us", kernel=name)
+            if h is not None and h.count:
+                entry["p50_us"] = round(h.quantile(0.5), 3)
+                entry["p95_us"] = round(h.quantile(0.95), 3)
+                entry["iters"] = h.count
         if name.startswith("lut_matmul_w"):
             toks = int(name.rsplit("tok", 1)[1])
             entry["ms_per_step"] = round(us / 1e3, 4)
@@ -110,12 +142,10 @@ if __name__ == "__main__":
     ap.add_argument("--json", default=None,
                     help="write the rows as JSON, e.g. BENCH_kernels.json")
     args = ap.parse_args()
-    rows = main()
+    registry = MetricRegistry()
+    rows = main(registry=registry)
     for r in rows:
         print(r)
     if args.json:
-        path = Path(args.json)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(rows_to_json(rows), indent=1,
-                                   sort_keys=True))
-        print(f"bench rows -> {path}")
+        write_bench_json(args.json, rows_to_json(rows, registry))
+        print(f"bench rows -> {args.json}")

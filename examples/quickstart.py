@@ -79,6 +79,30 @@ drift budget (the bench summary's ``mixed`` block reports the
 comparison).  During the serve, shadow-step drift samples feed an online
 per-layer EWMA estimator (``repro.sensitivity.online``) that keeps the
 measured profile fresh.
+
+Observability
+-------------
+Everything above can run under one trace.  ``--trace DIR`` (on both the
+fleet and serve CLIs) turns on :mod:`repro.obs` — a stdlib-only metrics
+registry (counters, gauges, histograms with exact p50/p95/p99) plus
+crash-safe JSONL spans, file-per-process so fleet workers and the serve
+process share a directory without locking:
+
+    python -m repro.fleet --library runs/lib --sweep smoke --trace runs/trace
+    python -m repro.launch.serve --reduced --library runs/lib \
+        --profile runs/lib/_profiles/gemma3-1b.json \
+        --qos-class "gold:0.02,batch:0.5" --class-mix "gold:0.4,batch:0.6" \
+        --trace runs/trace --bench-json BENCH_qos.json
+    python -m repro.obs summary --trace runs/trace
+
+Fleet jobs run under ``fleet.job`` spans (engine search spans nested
+inside, per-job ``engine_s``/``commit_s`` in the receipts) and the sweep
+prints its five slowest jobs plus per-engine wall-time totals; the serve
+emits ``serve.batch`` > ``serve.prefill``/``serve.decode``/``serve.shadow``
+spans and per-class latency histograms, so the summary (and the bench
+JSON's class rows) state p50/p95/p99 ms-per-step per traffic tier.  The
+inspector gates CI: ``--require-span fleet.job --require-class-latency``
+exits non-zero when the trace is missing either.
 """
 
 import numpy as np

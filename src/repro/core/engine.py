@@ -39,6 +39,8 @@ from typing import Callable, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+from ..obs.metrics import get_registry
+from ..obs.trace import span as trace_span
 from .arith import benchmark as _benchmark
 from .circuits import Circuit
 from .miter import ERROR_METRICS, HAVE_Z3, ErrorStats, measure_error, \
@@ -56,6 +58,7 @@ __all__ = [
     "verify_circuit",
     "get_engine",
     "available_engines",
+    "InstrumentedEngine",
     "ENGINE_NAMES",
 ]
 
@@ -433,21 +436,68 @@ class RewriteEngine:
 # ---------------------------------------------------------------------------
 ENGINE_NAMES = ("shared", "xpat", "tensor", "anneal", "muscat", "mecals")
 
+# the per-engine evaluation counters differ in name across engines; the
+# instrumented wrapper folds whichever is present into one
+# ``search_evaluations_total`` rate so dashboards compare engines directly
+_EVAL_STAT_KEYS = ("evaluations", "steps", "grid_points_tried")
+
+
+class InstrumentedEngine:
+    """Transparent observability wrapper every registry lookup returns.
+
+    ``run`` wraps the inner engine in a ``search.run`` span and folds the
+    outcome's stats into the process registry (evaluations/sec across
+    engines, result counts, wall-time histogram, SMT solver seconds).
+    Everything else — including engine-specific attributes like
+    ``TensorEngine.mesh`` — passes through untouched, so callers keep
+    programming against the :class:`SearchEngine` protocol.
+    """
+
+    def __init__(self, inner: SearchEngine) -> None:
+        self._inner = inner
+        self.name = inner.name
+
+    def __getattr__(self, attr):
+        return getattr(self._inner, attr)
+
+    def run(self, job: SearchJob) -> SearchOutcome:
+        reg = get_registry()
+        with trace_span("search.run", engine=self.name,
+                        benchmark=job.benchmark_name, et=job.et,
+                        metric=job.error_metric, seed=job.seed) as sp:
+            outcome = self._inner.run(job)
+            stats = outcome.stats or {}
+            evals = sum(int(stats.get(k, 0)) for k in _EVAL_STAT_KEYS)
+            reg.counter("search_runs_total", engine=self.name).inc()
+            reg.counter("search_evaluations_total",
+                        engine=self.name).inc(evals)
+            reg.counter("search_results_total",
+                        engine=self.name).inc(len(outcome.results))
+            reg.histogram("search_run_s",
+                          engine=self.name).observe(outcome.wall_s)
+            if stats.get("smt_solve_s"):
+                reg.counter("search_smt_solve_s_total",
+                            engine=self.name).inc(float(stats["smt_solve_s"]))
+            sp.set(n_results=len(outcome.results), evaluations=evals,
+                   wall_s=round(outcome.wall_s, 4), ok=outcome.ok)
+        return outcome
+
 
 def get_engine(name: str, **opts) -> SearchEngine:
     """Engine instance by registry name; ``opts`` are engine-specific
     constructor knobs (e.g. ``population=`` for tensor, ``steps=`` for
-    anneal, ``timeout_ms=`` / ``sink=`` for the SMT engines)."""
+    anneal, ``timeout_ms=`` / ``sink=`` for the SMT engines).  Every
+    engine comes back wrapped in :class:`InstrumentedEngine`."""
     if name in ("shared", "xpat"):
-        return SmtEngine(method=name, **opts)
+        return InstrumentedEngine(SmtEngine(method=name, **opts))
     if name == "tensor":
-        return TensorEngine(**opts)
+        return InstrumentedEngine(TensorEngine(**opts))
     if name == "anneal":
-        return AnnealEngine(**opts)
+        return InstrumentedEngine(AnnealEngine(**opts))
     if name in ("muscat", "mecals"):
         if opts:
             raise TypeError(f"{name} engine takes no options, got {opts}")
-        return RewriteEngine(name)
+        return InstrumentedEngine(RewriteEngine(name))
     raise KeyError(f"unknown engine {name!r}; known: {ENGINE_NAMES}")
 
 

@@ -22,12 +22,16 @@ import multiprocessing
 import os
 import time
 import traceback
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from pathlib import Path
 
 from ..core.engine import SearchJob, available_engines, get_engine
 from ..library.store import OperatorStore, atomic_write_json
+from ..obs.export import dump_metrics
+from ..obs.metrics import get_registry
+from ..obs.trace import current_tracer
+from ..obs.trace import span as trace_span
 
 __all__ = ["JobResult", "run_job", "run_sweep", "RECEIPT_DIR"]
 
@@ -43,6 +47,20 @@ class JobResult:
     n_results: int = 0
     wall_s: float = 0.0
     error: str | None = None
+    stats: dict = field(default_factory=dict)   # engine stats (ok jobs)
+
+
+def _flush_worker_obs() -> None:
+    """Snapshot this process's metrics into the trace dir (if tracing).
+
+    Pool workers call this at the end of every job: the snapshot file is
+    per-process and atomically replaced, so repeated flushes just widen
+    that worker's cumulative view and the parent's read-time merge sees
+    whatever each worker last completed — crash included.
+    """
+    tracer = current_tracer()
+    if tracer is not None:
+        dump_metrics(tracer.root, get_registry())
 
 
 def _receipt_path(library_root: str | os.PathLike, job: SearchJob,
@@ -81,37 +99,58 @@ def run_job(job: SearchJob, library_root: str | os.PathLike,
     if job.engine == "tensor" and mesh is not None:
         ctor_opts["mesh"] = mesh
     store = OperatorStore(library_root)
-    try:
-        outcome = get_engine(job.engine, **ctor_opts).run(job)
-        sig = job.signature()
-        for cand in outcome.results:
-            store.put_circuit(
-                cand.circuit, sig, area=cand.area, source=job.engine,
-                proxies=cand.proxies, params=cand.params,
-                meta={**cand.meta, "wall_s": cand.wall_s, "job": job.key()},
-            )
-    except Exception as exc:
-        atomic_write_json(receipt, {
-            "status": "failed",
-            "job": dataclasses.asdict(job),
-            "engine_opts": opts,
-            "error": f"{type(exc).__name__}: {exc}",
-            "traceback": traceback.format_exc(limit=8),
-            "wall_s": round(time.time() - t0, 3),
-        })
-        return JobResult(job, "failed", wall_s=time.time() - t0,
-                         error=f"{type(exc).__name__}: {exc}")
+    reg = get_registry()
+    with trace_span("fleet.job", engine=job.engine,
+                    benchmark=job.benchmark_name, et=job.et,
+                    metric=job.error_metric, seed=job.seed,
+                    key=job.key()) as sp:
+        try:
+            t_eng = time.time()
+            outcome = get_engine(job.engine, **ctor_opts).run(job)
+            engine_s = time.time() - t_eng
+            sig = job.signature()
+            t_commit = time.time()
+            for cand in outcome.results:
+                store.put_circuit(
+                    cand.circuit, sig, area=cand.area, source=job.engine,
+                    proxies=cand.proxies, params=cand.params,
+                    meta={**cand.meta, "wall_s": cand.wall_s,
+                          "job": job.key()},
+                )
+            commit_s = time.time() - t_commit
+        except Exception as exc:
+            sp.set(status="failed", error=f"{type(exc).__name__}: {exc}")
+            reg.counter("fleet_jobs_total", engine=job.engine,
+                        status="failed").inc()
+            atomic_write_json(receipt, {
+                "status": "failed",
+                "job": dataclasses.asdict(job),
+                "engine_opts": opts,
+                "error": f"{type(exc).__name__}: {exc}",
+                "traceback": traceback.format_exc(limit=8),
+                "wall_s": round(time.time() - t0, 3),
+            })
+            _flush_worker_obs()
+            return JobResult(job, "failed", wall_s=time.time() - t0,
+                             error=f"{type(exc).__name__}: {exc}")
+        sp.set(status="ok", n_results=len(outcome.results),
+               engine_s=round(engine_s, 4), commit_s=round(commit_s, 4))
 
+    reg.counter("fleet_jobs_total", engine=job.engine, status="ok").inc()
+    reg.histogram("fleet_job_s", engine=job.engine).observe(time.time() - t0)
     atomic_write_json(receipt, {
         "status": "ok",
         "job": dataclasses.asdict(job),
         "engine_opts": opts,
         "n_results": len(outcome.results),
         "stats": outcome.stats,
+        "engine_s": round(engine_s, 4),
+        "commit_s": round(commit_s, 4),
         "wall_s": round(time.time() - t0, 3),
     })
+    _flush_worker_obs()
     return JobResult(job, "ok", n_results=len(outcome.results),
-                     wall_s=time.time() - t0)
+                     wall_s=time.time() - t0, stats=dict(outcome.stats))
 
 
 def run_sweep(spec, library_root: str | os.PathLike, *,

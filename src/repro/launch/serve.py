@@ -45,7 +45,6 @@ Measured sensitivities, QoS classes, mixed width
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -54,6 +53,9 @@ import numpy as np
 from .. import parallel
 from ..configs import ARCH_IDS, get_config
 from ..models import init_model
+from ..obs.export import dump_metrics, write_bench_json
+from ..obs.metrics import MetricRegistry, get_registry
+from ..obs.trace import configure as configure_tracing
 from ..serving import (
     ControllerConfig,
     LibraryWatcher,
@@ -180,7 +182,15 @@ def main() -> None:
     ap.add_argument("--bench-json", default=None,
                     help="write the telemetry summary (tok/s, ms/step, swap "
                          "count) here, e.g. BENCH_serve.json")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="observability trace dir: batch/prefill/decode "
+                         "spans + a metric snapshot land there; point it at "
+                         "a fleet run's trace dir for one merged view "
+                         "(python -m repro.obs summary --trace DIR)")
     args = ap.parse_args()
+
+    if args.trace:
+        configure_tracing(args.trace)
 
     if args.adaptive and not args.library:
         raise SystemExit("--adaptive requires --library (the frontier to walk)")
@@ -388,9 +398,13 @@ def main() -> None:
         for name, row in s.get("classes", {}).items():
             budget = scheduler.book.get(name).drift_budget
             drift = row.get("mean_drift")
+            p95 = row.get("p95_ms_per_step")
             print(f"  class {name:<8s}: {row['requests']} req, "
-                  f"{row['ms_per_step']} ms/step, mean drift "
-                  f"{'-' if drift is None else drift} "
+                  f"{row['ms_per_step']} ms/step"
+                  + (f" (p50 {row['p50_ms_per_step']} / p95 {p95} / "
+                     f"p99 {row['p99_ms_per_step']})" if p95 is not None
+                     else "")
+                  + f", mean drift {'-' if drift is None else drift} "
                   f"(budget {budget})")
     if online is not None and online.n_updates:
         print(f"  online sensitivities ({online.n_updates} samples): "
@@ -416,12 +430,17 @@ def main() -> None:
     if online is not None and online.n_updates:
         s["online_sensitivity"] = np.round(
             online.sensitivities(), 6).tolist()
+    if args.trace:
+        # the serve-side metric snapshot joins any fleet-side ones already
+        # in the dir: per-batch latency/throughput histograms (telemetry's
+        # own registry) plus the process registry the watcher and class
+        # scheduler record into
+        merged = MetricRegistry.from_snapshots(
+            [get_registry().snapshot(), telemetry.registry.snapshot()])
+        dump_metrics(args.trace, merged)
+        print(f"trace -> {args.trace}")
     if args.bench_json:
-        from pathlib import Path
-
-        out = Path(args.bench_json)
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(s, indent=1, sort_keys=True))
+        write_bench_json(args.bench_json, s)
         print(f"bench summary -> {args.bench_json}")
 
 

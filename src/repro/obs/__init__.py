@@ -1,0 +1,64 @@
+"""Unified observability plane: metrics, spans, exporters, inspector.
+
+One signal path for every pillar of the pipeline — fleet workers, search
+engines, the serving runtime — replacing the per-subsystem ad-hoc
+channels (event rings, end-of-run prints, hand-built bench dicts):
+
+* :mod:`repro.obs.metrics` — process-wide :class:`MetricRegistry` of
+  counters / gauges / histograms with exact p50/p95/p99, snapshot-able
+  and mergeable across processes.
+* :mod:`repro.obs.trace` — nestable :func:`span`\\ s written as crash-safe
+  per-process JSONL, deterministic ids, injectable clock, merged at read
+  time.
+* :mod:`repro.obs.export` — Prometheus text + atomic bench-JSON views.
+* ``python -m repro.obs`` — summarize/filter a trace dir (slowest spans,
+  per-engine fleet wall-time, per-class latency tables).
+
+Stdlib-only: importable before jax, numpy or z3 enter the process.
+"""
+
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricRegistry,
+    get_registry,
+    set_registry,
+)
+from .trace import (
+    TRACE_DIR_ENV,
+    Tracer,
+    configure,
+    current_tracer,
+    event,
+    read_trace,
+    span,
+    tracing_enabled,
+)
+from .export import (
+    dump_metrics,
+    prometheus_text,
+    read_metrics,
+    write_bench_json,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricRegistry",
+    "get_registry",
+    "set_registry",
+    "TRACE_DIR_ENV",
+    "Tracer",
+    "configure",
+    "current_tracer",
+    "event",
+    "read_trace",
+    "span",
+    "tracing_enabled",
+    "dump_metrics",
+    "prometheus_text",
+    "read_metrics",
+    "write_bench_json",
+]

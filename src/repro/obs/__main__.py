@@ -1,0 +1,197 @@
+"""``python -m repro.obs [summary|slowest|prom] --trace <dir>`` — inspect
+a merged trace directory.
+
+``summary`` prints span totals by name, the slowest spans, per-engine
+fleet job wall-time, and the per-class decode-latency table (p50/p95/p99
+ms/step) from the merged metric snapshots.  ``--require-span`` /
+``--require-class-latency`` turn the summary into a CI gate (non-zero
+exit when the trace is missing the asserted signals).  ``prom`` dumps the
+merged metrics in Prometheus text format.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .export import METRICS_GLOB, prometheus_text, read_metrics
+from .metrics import Histogram, MetricRegistry
+from .trace import read_trace
+
+# the metric families the serving telemetry records (kept in one place so
+# the inspector and repro.serving.telemetry cannot drift apart)
+MS_PER_STEP_METRIC = "serve_ms_per_step"
+DECODE_TOK_S_METRIC = "serve_decode_tok_s"
+ALL_CLASSES = "_all"   # the label the whole-run aggregate rides under
+
+
+def _fmt(v, width: int = 9, prec: int = 3) -> str:
+    if v is None:
+        return "-".rjust(width)
+    return f"{v:{width}.{prec}f}"
+
+
+def span_totals(spans: list[dict]) -> list[tuple[str, int, float]]:
+    """``(name, count, total_s)`` rows, heaviest first."""
+    agg: dict[str, list[float]] = {}
+    for s in spans:
+        agg.setdefault(s["name"], []).append(float(s.get("dur_s", 0.0)))
+    return sorted(((name, len(ds), sum(ds)) for name, ds in agg.items()),
+                  key=lambda r: -r[2])
+
+
+def slowest_spans(spans: list[dict], n: int = 5) -> list[dict]:
+    return sorted(spans, key=lambda s: -float(s.get("dur_s", 0.0)))[:n]
+
+
+def engine_totals(spans: list[dict]) -> dict[str, dict]:
+    """Per-engine wall-time over ``fleet.job`` spans."""
+    agg: dict[str, dict] = {}
+    for s in spans:
+        if s["name"] != "fleet.job":
+            continue
+        eng = str(s.get("attrs", {}).get("engine", "?"))
+        row = agg.setdefault(eng, {"jobs": 0, "wall_s": 0.0, "results": 0})
+        row["jobs"] += 1
+        row["wall_s"] += float(s.get("dur_s", 0.0))
+        row["results"] += int(s.get("attrs", {}).get("n_results", 0) or 0)
+    return agg
+
+
+def class_latency_rows(metrics: MetricRegistry) -> dict[str, dict]:
+    """Per-class decode latency percentiles from the merged snapshots."""
+    rows: dict[str, dict] = {}
+    for labels, hist in metrics.with_name(MS_PER_STEP_METRIC):
+        if not isinstance(hist, Histogram) or hist.count == 0:
+            continue
+        cls = labels.get("class", ALL_CLASSES)
+        rows[cls] = {
+            "batches": hist.count,
+            "mean": hist.mean,
+            **hist.percentiles(),
+        }
+        tok = metrics.find(DECODE_TOK_S_METRIC, **labels)
+        if isinstance(tok, Histogram) and tok.count:
+            rows[cls]["tok_s_p50"] = tok.quantile(0.5)
+    return rows
+
+
+def _describe_span(s: dict) -> str:
+    attrs = s.get("attrs", {})
+    inner = " ".join(f"{k}={attrs[k]}" for k in sorted(attrs))
+    return f"{s['name']}" + (f" [{inner}]" if inner else "")
+
+
+def summarize(trace_dir: Path, *, limit: int = 5, out=print) -> dict:
+    spans = read_trace(trace_dir)
+    metrics = read_metrics(trace_dir)
+    n_files = len(list(trace_dir.glob("spans-*.jsonl")))
+    n_snaps = len(list(trace_dir.glob(METRICS_GLOB)))
+    out(f"trace {trace_dir}: {len(spans)} span(s) from {n_files} file(s), "
+        f"{n_snaps} metric snapshot(s)")
+
+    totals = span_totals(spans)
+    if totals:
+        out("\nspan totals:")
+        out(f"  {'name':24s} {'count':>6s} {'total_s':>9s} {'mean_s':>9s}")
+        for name, count, total in totals:
+            out(f"  {name:24s} {count:6d} {_fmt(total)} "
+                f"{_fmt(total / count)}")
+
+        out(f"\nslowest {limit} span(s):")
+        for s in slowest_spans(spans, limit):
+            out(f"  {_fmt(float(s.get('dur_s', 0.0)))}s  {_describe_span(s)}")
+
+    engines = engine_totals(spans)
+    if engines:
+        out("\nfleet engines (job wall-time):")
+        out(f"  {'engine':10s} {'jobs':>5s} {'wall_s':>9s} {'mean_s':>9s} "
+            f"{'results':>8s}")
+        for eng in sorted(engines, key=lambda e: -engines[e]["wall_s"]):
+            row = engines[eng]
+            out(f"  {eng:10s} {row['jobs']:5d} {_fmt(row['wall_s'])} "
+                f"{_fmt(row['wall_s'] / row['jobs'])} {row['results']:8d}")
+
+    classes = class_latency_rows(metrics)
+    if classes:
+        out("\nper-class decode latency (ms/step):")
+        out(f"  {'class':10s} {'batches':>7s} {'p50':>9s} {'p95':>9s} "
+            f"{'p99':>9s} {'mean':>9s}")
+        for cls in sorted(classes):
+            r = classes[cls]
+            out(f"  {cls:10s} {r['batches']:7d} {_fmt(r['p50'])} "
+                f"{_fmt(r['p95'])} {_fmt(r['p99'])} {_fmt(r['mean'])}")
+
+    return {"spans": spans, "engines": engines, "classes": classes}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Summarize/filter an observability trace directory.",
+    )
+    ap.add_argument("command", nargs="?", default="summary",
+                    choices=("summary", "slowest", "prom"),
+                    help="summary (default): totals + slowest + engines + "
+                         "per-class latency; slowest: just the slowest "
+                         "spans; prom: merged metrics as Prometheus text")
+    ap.add_argument("--trace", required=True,
+                    help="trace directory (spans-*.jsonl + metrics-*.json)")
+    ap.add_argument("--limit", type=int, default=5,
+                    help="how many slowest spans to show")
+    ap.add_argument("--name", default=None,
+                    help="filter spans to names containing this substring")
+    ap.add_argument("--require-span", action="append", default=[],
+                    metavar="NAME[=N]",
+                    help="exit 1 unless >= N (default 1) spans named NAME "
+                         "are present (CI gate; repeatable)")
+    ap.add_argument("--require-class-latency", action="store_true",
+                    help="exit 1 unless at least one per-class (non-"
+                         f"{ALL_CLASSES!r}) latency histogram is present")
+    args = ap.parse_args(argv)
+
+    trace_dir = Path(args.trace)
+    if not trace_dir.is_dir():
+        print(f"no such trace dir: {trace_dir}", file=sys.stderr)
+        return 2
+
+    if args.command == "prom":
+        sys.stdout.write(prometheus_text(read_metrics(trace_dir)))
+        return 0
+
+    if args.command == "slowest":
+        spans = read_trace(trace_dir)
+        if args.name:
+            spans = [s for s in spans if args.name in s["name"]]
+        for s in slowest_spans(spans, args.limit):
+            print(f"{_fmt(float(s.get('dur_s', 0.0)))}s  {_describe_span(s)}")
+        return 0
+
+    report = summarize(trace_dir, limit=args.limit)
+
+    rc = 0
+    by_name: dict[str, int] = {}
+    for s in report["spans"]:
+        by_name[s["name"]] = by_name.get(s["name"], 0) + 1
+    for req in args.require_span:
+        name, _, n = req.partition("=")
+        want = int(n) if n else 1
+        got = by_name.get(name, 0)
+        if got < want:
+            print(f"FAIL: {got} span(s) named {name!r}, need >= {want}",
+                  file=sys.stderr)
+            rc = 1
+    if args.require_class_latency:
+        per_class = [c for c in report["classes"] if c != ALL_CLASSES]
+        if not per_class:
+            print("FAIL: no per-class latency histograms in trace metrics",
+                  file=sys.stderr)
+            rc = 1
+        else:
+            print(f"\nper-class latency present for: {sorted(per_class)}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

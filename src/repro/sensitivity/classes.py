@@ -30,6 +30,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Sequence
 
+from ..obs.metrics import MetricRegistry, get_registry
+
 __all__ = [
     "QoSClass",
     "ClassBook",
@@ -142,7 +144,8 @@ class ClassScheduler:
 
     def __init__(self, book: ClassBook, ladder, *, ewma_alpha: float = 0.4,
                  shadow_every: int = 4, headroom: float = 0.5,
-                 relax_patience: int = 4) -> None:
+                 relax_patience: int = 4,
+                 registry: MetricRegistry | None = None) -> None:
         assert 0 < ewma_alpha <= 1 and 0 <= headroom < 1
         self.book = book
         self.ewma_alpha = float(ewma_alpha)
@@ -153,6 +156,9 @@ class ClassScheduler:
         self._drift: dict[str, float] = {c.name: 0.0 for c in book}
         self._calm: dict[str, int] = {c.name: 0 for c in book}
         self._served: dict[str, int] = {c.name: 0 for c in book}
+        # backoff state is observable: the trace-dir metric snapshot shows
+        # which classes ever tightened, and how deep, without a debugger
+        self._registry = registry if registry is not None else get_registry()
         self.adopt(ladder)
 
     # ------------------------------------------------------------------ state
@@ -206,6 +212,7 @@ class ClassScheduler:
             # decay the EWMA toward the budget so one spike does not keep
             # ratcheting the class down on every subsequent sample
             self._drift[name] = budget * self.headroom
+            self._note_backoff(name, "tighten")
             return True
         if self._drift[name] <= budget * self.headroom \
                 and self._tight[name] > 0:
@@ -213,10 +220,17 @@ class ClassScheduler:
             if self._calm[name] >= self.relax_patience:
                 self._tight[name] -= 1
                 self._calm[name] = 0
+                self._note_backoff(name, "relax")
                 return True
         else:
             self._calm[name] = 0
         return False
+
+    def _note_backoff(self, name: str, move: str) -> None:
+        self._registry.counter("class_backoff_moves_total", move=move,
+                               **{"class": name}).inc()
+        self._registry.gauge("class_backoff_level",
+                             **{"class": name}).set(self._tight[name])
 
     def measured_drift(self, name: str) -> float:
         return self._drift[name]

@@ -40,6 +40,8 @@ import numpy as np
 
 from ..library.qos import LayerPlan, refresh_plan, stack_luts, validate_lut_stack
 from ..models import decode_fn, init_caches
+from ..obs.trace import event as trace_event
+from ..obs.trace import span as trace_span
 from .loadgen import LoadProfile, Request, synth_requests
 from .telemetry import Telemetry
 
@@ -212,6 +214,8 @@ class ServingEngine:
             telemetry.register_plan(plan)
             telemetry.record_swap(batch=batch_idx, reason=reason,
                                   old=old_id, new=plan.plan_id)
+        trace_event("serve.swap", reason=reason, batch=batch_idx,
+                    old=old_id, new=plan.plan_id)
         return True
 
     def refresh_library(self, compiled, exact_area: float, *,
@@ -360,57 +364,71 @@ class ServingEngine:
         if self._warmup is not None:
             caches = self._warmup(caches)
 
-        t0 = time.perf_counter()
-        logits = None
-        for t in range(self.prompt_len):
-            logits, caches = self._step(caches, prompts[:, t:t + 1],
-                                        jnp.int32(t), luts=luts)
-        logits.block_until_ready()
-        t1 = time.perf_counter()
+        with trace_span("serve.batch", n_requests=len(requests)) as batch_sp:
+            with trace_span("serve.prefill",
+                            tokens=len(requests) * self.prompt_len):
+                t0 = time.perf_counter()
+                logits = None
+                for t in range(self.prompt_len):
+                    logits, caches = self._step(caches, prompts[:, t:t + 1],
+                                                jnp.int32(t), luts=luts)
+                logits.block_until_ready()
+                t1 = time.perf_counter()
 
-        shadow_logits = None
-        shadow_s = 0.0
-        generated = []
-        for t in range(self.prompt_len, self.total):
-            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            generated.append(tok)
-            if shadow and self._adaptive and t == self.total - 1:
-                # exact shadow step on copies — the live call below donates
-                # the real caches, the copies are consumed by the shadow.
-                # Timed separately and excluded from decode_s: the shadow is
-                # measurement overhead, and folding it into ms/step would
-                # bias the very latency signal the controller acts on.
-                ts = time.perf_counter()
-                shadow_caches = jax.tree.map(jnp.copy, caches)
-                shadow_logits, _ = self._jit_step(
-                    self.params, shadow_caches, tok, jnp.int32(t),
-                    self._exact_luts)
-                shadow_logits.block_until_ready()
-                shadow_s = time.perf_counter() - ts
-            logits, caches = self._step(caches, tok, jnp.int32(t), luts=luts)
-        logits.block_until_ready()
-        t2 = time.perf_counter()
+            shadow_logits = None
+            shadow_s = 0.0
+            generated = []
+            with trace_span("serve.decode", steps=self.gen_len) as decode_sp:
+                for t in range(self.prompt_len, self.total):
+                    tok = jnp.argmax(logits, axis=-1)[:, None]
+                    tok = tok.astype(jnp.int32)
+                    generated.append(tok)
+                    if shadow and self._adaptive and t == self.total - 1:
+                        # exact shadow step on copies — the live call below
+                        # donates the real caches, the copies are consumed by
+                        # the shadow.  Timed separately and excluded from
+                        # decode_s: the shadow is measurement overhead, and
+                        # folding it into ms/step would bias the very latency
+                        # signal the controller acts on.
+                        with trace_span("serve.shadow"):
+                            ts = time.perf_counter()
+                            shadow_caches = jax.tree.map(jnp.copy, caches)
+                            shadow_logits, _ = self._jit_step(
+                                self.params, shadow_caches, tok, jnp.int32(t),
+                                self._exact_luts)
+                            shadow_logits.block_until_ready()
+                            shadow_s = time.perf_counter() - ts
+                    logits, caches = self._step(caches, tok, jnp.int32(t),
+                                                luts=luts)
+                logits.block_until_ready()
+                t2 = time.perf_counter()
+                decode_sp.set(shadow_s=round(shadow_s, 6))
 
-        n = len(requests)
-        drift = None
-        if shadow_logits is not None:
-            # only the real rows: zero-padded requests decode garbage and
-            # would contaminate the controller's drift signal on the
-            # partial batches ramp/spike load produces routinely
-            drift = float(jnp.abs(logits[:n] - shadow_logits[:n]).mean())
+            n = len(requests)
+            drift = None
+            if shadow_logits is not None:
+                # only the real rows: zero-padded requests decode garbage and
+                # would contaminate the controller's drift signal on the
+                # partial batches ramp/spike load produces routinely
+                drift = float(jnp.abs(logits[:n] - shadow_logits[:n]).mean())
+            stats = BatchStats(
+                n_requests=n,
+                prefill_s=t1 - t0,
+                decode_s=t2 - t1 - shadow_s,
+                prefill_tokens=n * self.prompt_len,
+                decode_tokens=n * self.gen_len,
+                decode_steps=self.gen_len,
+                drift=drift,
+            )
+            batch_sp.set(ms_per_step=round(stats.ms_per_step, 3),
+                         decode_tok_s=round(stats.decode_tok_s, 2))
+            if drift is not None:
+                batch_sp.set(drift=round(drift, 6))
         # completions for the real (unpadded) requests — a degenerate
         # repeated-token sample is also the quickest eyeball check that an
         # aggressive plan's LUT routing is live in decode
         self.last_tokens = np.asarray(jnp.concatenate(generated, axis=1))[:n]
-        return BatchStats(
-            n_requests=n,
-            prefill_s=t1 - t0,
-            decode_s=t2 - t1 - shadow_s,
-            prefill_tokens=n * self.prompt_len,
-            decode_tokens=n * self.gen_len,
-            decode_steps=self.gen_len,
-            drift=drift,
-        )
+        return stats
 
     # ----------------------------------------------------------------- serve
     def serve(
@@ -451,6 +469,10 @@ class ServingEngine:
         queues: dict[str, deque[Request]] | None = None
         if scheduler is not None:
             queues = {name: deque() for name in scheduler.book.names}
+        # wall-clock enqueue times (requests themselves carry only the
+        # synthetic arrival tick) so drained batches can report real
+        # time-in-queue to the per-class wait histograms
+        enqueued_at: dict[int, float] = {}
         # device-resident class stacks, keyed by ladder level and
         # invalidated on ladder refresh — without this every class batch
         # would re-upload its (n_layers, side, side) stack host-to-device
@@ -458,11 +480,13 @@ class ServingEngine:
         device_ladder = None
         batch_idx = 0
         for tick in range(profile.n_ticks):
-            if queues is not None:
-                for r in per_tick[tick]:
+            now = time.perf_counter()
+            for r in per_tick[tick]:
+                enqueued_at[r.rid] = now
+                if queues is not None:
                     queues[scheduler.book.route(r.qos_class)].append(r)
-            else:
-                queue.extend(per_tick[tick])
+                else:
+                    queue.append(r)
             while True:
                 # ---- next batch: priority class queue, or the one queue
                 if queues is not None:
@@ -478,6 +502,11 @@ class ServingEngine:
                 reqs = [q.popleft() for _ in range(min(self.batch, len(q)))]
                 backlog = (sum(len(x) for x in queues.values())
                            if queues is not None else len(queue))
+                t_drain = time.perf_counter()
+                telemetry.record_queue(
+                    cls, backlog,
+                    [t_drain - enqueued_at.pop(r.rid, t_drain)
+                     for r in reqs])
 
                 # ---- resolve this batch's plan --------------------------
                 if scheduler is not None:
@@ -544,10 +573,15 @@ class ServingEngine:
                                 compiled, exact_area, controller=controller,
                                 scheduler=scheduler, telemetry=telemetry,
                                 batch_idx=batch_idx)
+                        trace_event("serve.refresh", cause="watcher",
+                                    changed=changed, batch=batch_idx)
                         if changed and log:
                             log(f"batch {batch_idx}: library refresh -> "
                                 f"plan {self._plan.plan_id}")
                     except (LookupError, ValueError) as e:
+                        trace_event("serve.refresh", cause="watcher",
+                                    changed=False, batch=batch_idx,
+                                    skipped=str(e))
                         if log:
                             log(f"watcher: refresh skipped ({e})")
                 if controller is not None and self._adaptive:
@@ -565,6 +599,9 @@ class ServingEngine:
                                  else None)
                     level = controller.observe(eff_ms, drift_sig)
                     if level is not None:
+                        trace_event("serve.control", level=level,
+                                    cause=controller.last_reason,
+                                    batch=batch_idx)
                         if scheduler is None:
                             moved = self.swap_plan(
                                 controller.plan, controller.luts(),

@@ -1,43 +1,74 @@
-"""Ring-buffer serving telemetry: per-batch metrics, plan table, swaps.
+"""Serving telemetry: a thin view over the observability metric core.
 
-The engine appends one event per served batch (tok/s split into prefill
-and decode, ms/step, active plan id, measured shadow drift when sampled)
-into a bounded ring — a long-running server never grows the log without
-bound — while the *plan table* (plan id -> per-layer operator keys) and
-the *swap log* are tiny and kept whole.  ``dump()`` writes everything as
-one JSON document; ``summary()`` is the aggregate the bench trajectory
-ingests (``BENCH_serve.json``).
+The engine has exactly one recording path: every per-batch measurement
+lands in a :class:`repro.obs.metrics.MetricRegistry` (counters for the
+whole-run rates, per-class latency/throughput/drift *histograms* — so
+``summary()`` can state per-class p50/p95/p99 ms-per-step, which a
+mean-only row never could), and the bounded ring of raw per-batch events
+is kept alongside for post-mortems — a long-running server never grows
+the log without bound, while the registry aggregates stay exact across
+ring wrap.  The *plan table* (plan id -> per-layer operator keys) and the
+*swap log* are tiny and kept whole.
+
+``summary()`` is the aggregate the bench trajectory ingests
+(``BENCH_serve.json``); ``dump()`` writes the full document **atomically**
+(parent dirs created, temp-file + ``os.replace``) so a mid-serve crash
+never leaves a truncated JSON artifact.  The registry itself can be
+snapshotted into a trace dir (``repro.obs.export.dump_metrics``) where
+``python -m repro.obs`` merges it with fleet-side metrics.
 """
 
 from __future__ import annotations
 
-import json
 import time
 from collections import deque
 from pathlib import Path
 
-__all__ = ["Telemetry"]
+from ..obs.export import write_bench_json
+from ..obs.metrics import LATENCY_MS_BUCKETS, MetricRegistry
+
+__all__ = ["Telemetry", "ALL_CLASSES", "TOK_S_BUCKETS", "DRIFT_BUCKETS"]
+
+# the label the whole-run aggregate rides under; per-QoS-class rows appear
+# next to it as classes are actually served (a single-tier serve stays
+# clean: only "_all" exists)
+ALL_CLASSES = "_all"
+
+TOK_S_BUCKETS = (1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
+                 1000.0, 2500.0, 5000.0, 10_000.0, 25_000.0, 100_000.0)
+DRIFT_BUCKETS = (1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 0.01, 0.025, 0.05,
+                 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
 
 
 class Telemetry:
-    def __init__(self, capacity: int = 4096) -> None:
+    def __init__(self, capacity: int = 4096,
+                 registry: MetricRegistry | None = None) -> None:
         self.capacity = int(capacity)
         self.events: deque[dict] = deque(maxlen=self.capacity)
         self.plans: dict[str, dict] = {}
         self.swaps: list[dict] = []
-        self.n_batches = 0
-        self.n_requests = 0
-        # whole-run accumulators: the ring may wrap on long serves, but the
-        # summary's rates must cover the same window as its counters
-        self._prefill_s = 0.0
-        self._decode_s = 0.0
-        self._prefill_tokens = 0
-        self._decode_tokens = 0
-        self._decode_steps = 0
-        # per-QoS-class accumulators (class-aware serving); keys appear as
-        # classes are actually served, so a single-tier serve stays clean
-        self._classes: dict[str, dict] = {}
+        # own registry by default: two engines (or two tests) in one
+        # process must not cross-contaminate each other's counters
+        self.registry = registry if registry is not None else MetricRegistry()
         self._t0 = time.time()
+
+    # --------------------------------------------------------------- helpers
+    def _count(self, name: str, cls: str | None, n: float) -> None:
+        self.registry.counter(name, **{"class": ALL_CLASSES}).inc(n)
+        if cls is not None:
+            self.registry.counter(name, **{"class": cls}).inc(n)
+
+    def _observe(self, name: str, cls: str | None, v: float,
+                 buckets) -> None:
+        self.registry.histogram(name, buckets=buckets,
+                                **{"class": ALL_CLASSES}).observe(v)
+        if cls is not None:
+            self.registry.histogram(name, buckets=buckets,
+                                    **{"class": cls}).observe(v)
+
+    def _counter_value(self, name: str, cls: str = ALL_CLASSES) -> float:
+        c = self.registry.find(name, **{"class": cls})
+        return c.value if c is not None else 0.0
 
     # ------------------------------------------------------------------ write
     def register_plan(self, plan) -> str:
@@ -59,28 +90,22 @@ class Telemetry:
                      decode_tokens: int, decode_steps: int,
                      plan_id: str | None, drift: float | None = None,
                      backlog: int = 0, qos_class: str | None = None) -> None:
-        self.n_batches += 1
-        self.n_requests += n_requests
-        self._prefill_s += prefill_s
-        self._decode_s += decode_s
-        self._prefill_tokens += prefill_tokens
-        self._decode_tokens += decode_tokens
-        self._decode_steps += decode_steps
-        if qos_class is not None:
-            c = self._classes.setdefault(qos_class, {
-                "batches": 0, "requests": 0, "decode_s": 0.0,
-                "decode_steps": 0, "decode_tokens": 0,
-                "drift_sum": 0.0, "drift_n": 0, "drift_max": 0.0,
-            })
-            c["batches"] += 1
-            c["requests"] += n_requests
-            c["decode_s"] += decode_s
-            c["decode_steps"] += decode_steps
-            c["decode_tokens"] += decode_tokens
-            if drift is not None:
-                c["drift_sum"] += float(drift)
-                c["drift_n"] += 1
-                c["drift_max"] = max(c["drift_max"], float(drift))
+        self._count("serve_batches_total", qos_class, 1)
+        self._count("serve_requests_total", qos_class, n_requests)
+        self._count("serve_prefill_s_total", qos_class, prefill_s)
+        self._count("serve_decode_s_total", qos_class, decode_s)
+        self._count("serve_prefill_tokens_total", qos_class, prefill_tokens)
+        self._count("serve_decode_tokens_total", qos_class, decode_tokens)
+        self._count("serve_decode_steps_total", qos_class, decode_steps)
+        ms_per_step = 1e3 * decode_s / max(1, decode_steps)
+        self._observe("serve_ms_per_step", qos_class, ms_per_step,
+                      LATENCY_MS_BUCKETS)
+        if decode_s > 0:
+            self._observe("serve_decode_tok_s", qos_class,
+                          decode_tokens / decode_s, TOK_S_BUCKETS)
+        if drift is not None:
+            self._observe("serve_drift", qos_class, float(drift),
+                          DRIFT_BUCKETS)
         self.events.append({
             "batch": batch,
             "tick": tick,
@@ -93,7 +118,7 @@ class Telemetry:
             if prefill_s > 0 else None,
             "decode_tok_s": round(decode_tokens / decode_s, 2)
             if decode_s > 0 else None,
-            "ms_per_step": round(1e3 * decode_s / max(1, decode_steps), 3),
+            "ms_per_step": round(ms_per_step, 3),
             "plan": plan_id,
             "drift": None if drift is None else round(float(drift), 6),
             "backlog": backlog,
@@ -102,65 +127,109 @@ class Telemetry:
 
     def record_swap(self, *, batch: int, reason: str, old: str | None,
                     new: str | None) -> None:
+        self.registry.counter("serve_swaps_total", reason=reason).inc()
         self.swaps.append({"batch": batch, "reason": reason,
                            "from": old, "to": new})
 
+    def record_queue(self, qos_class: str | None, depth: int,
+                     wait_s=()) -> None:
+        """Queue health at batch-composition time: current depth (gauge)
+        plus each drained request's time-in-queue (histogram)."""
+        cls = qos_class if qos_class is not None else ALL_CLASSES
+        self.registry.gauge("serve_queue_depth",
+                            **{"class": cls}).set(depth)
+        for w in wait_s:
+            self._observe("serve_queue_wait_s", qos_class, float(w), None)
+
     # ------------------------------------------------------------------- read
+    @property
+    def n_batches(self) -> int:
+        return int(self._counter_value("serve_batches_total"))
+
+    @property
+    def n_requests(self) -> int:
+        return int(self._counter_value("serve_requests_total"))
+
     @property
     def swap_count(self) -> int:
         return len(self.swaps)
 
+    def _class_names(self) -> list[str]:
+        return sorted({labels["class"]
+                       for labels, _ in
+                       self.registry.with_name("serve_batches_total")
+                       if labels["class"] != ALL_CLASSES})
+
+    def _class_row(self, cls: str) -> dict:
+        decode_s = self._counter_value("serve_decode_s_total", cls)
+        steps = self._counter_value("serve_decode_steps_total", cls)
+        tokens = self._counter_value("serve_decode_tokens_total", cls)
+        lat = self.registry.find("serve_ms_per_step", **{"class": cls})
+        drift = self.registry.find("serve_drift", **{"class": cls})
+        row = {
+            "batches": int(self._counter_value("serve_batches_total", cls)),
+            "requests": int(self._counter_value("serve_requests_total", cls)),
+            "decode_tok_s": round(tokens / decode_s, 2) if decode_s else 0.0,
+            "ms_per_step": round(1e3 * decode_s / steps, 3) if steps else 0.0,
+            "mean_drift": round(drift.mean, 6)
+            if drift is not None and drift.count else None,
+            "max_drift": round(drift.max, 6)
+            if drift is not None and drift.count else None,
+            "drift_samples": drift.count if drift is not None else 0,
+        }
+        # the SLO-facing numbers a mean can't express: per-class latency
+        # percentiles over the run's per-batch ms/step observations
+        if lat is not None and lat.count:
+            for p, v in lat.percentiles().items():
+                row[f"{p}_ms_per_step"] = round(v, 3)
+        return row
+
     def summary(self) -> dict:
-        """The aggregates the CI bench row wants: throughput, latency,
-        swap activity.  Rates come from whole-run accumulators, not the
-        ring, so they stay consistent with ``batches``/``requests`` even
-        after the ring wraps on long serves."""
+        """The aggregates the CI bench row wants: throughput, latency
+        (mean *and* p50/p95/p99), swap activity.  Rates come from the
+        whole-run registry counters, not the ring, so they stay
+        consistent with ``batches``/``requests`` even after the ring
+        wraps on long serves."""
         reasons: dict[str, int] = {}
         for s in self.swaps:
             reasons[s["reason"]] = reasons.get(s["reason"], 0) + 1
-        classes = {}
-        for name, c in self._classes.items():
-            classes[name] = {
-                "batches": c["batches"],
-                "requests": c["requests"],
-                "decode_tok_s": round(c["decode_tokens"] / c["decode_s"], 2)
-                if c["decode_s"] else 0.0,
-                "ms_per_step": round(1e3 * c["decode_s"] /
-                                     c["decode_steps"], 3)
-                if c["decode_steps"] else 0.0,
-                "mean_drift": round(c["drift_sum"] / c["drift_n"], 6)
-                if c["drift_n"] else None,
-                "max_drift": round(c["drift_max"], 6)
-                if c["drift_n"] else None,
-                "drift_samples": c["drift_n"],
-            }
-        return {
+        decode_s = self._counter_value("serve_decode_s_total")
+        prefill_s = self._counter_value("serve_prefill_s_total")
+        steps = self._counter_value("serve_decode_steps_total")
+        lat = self.registry.find("serve_ms_per_step",
+                                 **{"class": ALL_CLASSES})
+        out = {
             "batches": self.n_batches,
             "requests": self.n_requests,
             "wall_s": round(time.time() - self._t0, 3),
-            "decode_tok_s": round(self._decode_tokens / self._decode_s, 2)
-            if self._decode_s else 0.0,
-            "prefill_tok_s": round(self._prefill_tokens / self._prefill_s, 2)
-            if self._prefill_s else 0.0,
-            "ms_per_step": round(1e3 * self._decode_s /
-                                 self._decode_steps, 3)
-            if self._decode_steps else 0.0,
+            "decode_tok_s": round(
+                self._counter_value("serve_decode_tokens_total") / decode_s,
+                2) if decode_s else 0.0,
+            "prefill_tok_s": round(
+                self._counter_value("serve_prefill_tokens_total") / prefill_s,
+                2) if prefill_s else 0.0,
+            "ms_per_step": round(1e3 * decode_s / steps, 3) if steps else 0.0,
             "swaps": self.swap_count,
             "swaps_by_reason": reasons,
             "plans_used": len(self.plans),
-            **({"classes": classes} if classes else {}),
         }
+        if lat is not None and lat.count:
+            out["latency_ms_per_step"] = {
+                p: round(v, 3) for p, v in lat.percentiles().items()}
+        classes = {cls: self._class_row(cls) for cls in self._class_names()}
+        if classes:
+            out["classes"] = classes
+        return out
 
     def dump(self, path: str | Path) -> dict:
         """Write the full telemetry document (summary + plan table + swap
-        log + ring events) as JSON and return it."""
+        log + ring events) as JSON — atomically, creating parent dirs —
+        and return it."""
         doc = {
             "summary": self.summary(),
             "plans": self.plans,
             "swaps": self.swaps,
             "events": list(self.events),
         }
-        p = Path(path)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(json.dumps(doc, indent=1, sort_keys=True))
+        write_bench_json(Path(path), doc)
         return doc

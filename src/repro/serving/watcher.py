@@ -21,6 +21,7 @@ import time
 from typing import Callable
 
 from ..library.store import OperatorStore
+from ..obs.metrics import MetricRegistry, get_registry
 
 __all__ = ["LibraryWatcher"]
 
@@ -29,7 +30,8 @@ class LibraryWatcher:
     def __init__(self, library, *, min_poll_s: float = 2.0,
                  target_bits: int | None = None,
                  widths: tuple[int, ...] | None = None,
-                 clock: Callable[[], float] = time.monotonic) -> None:
+                 clock: Callable[[], float] = time.monotonic,
+                 registry: MetricRegistry | None = None) -> None:
         self.library = library
         self.store = OperatorStore(library)
         # the serving width is sticky across refreshes: a W8A8 serve must
@@ -47,6 +49,10 @@ class LibraryWatcher:
         self._token = self.store.version_token()
         self._last_poll = clock()
         self.refreshes = 0
+        # watcher health rides the process-wide registry by default so a
+        # trace-dir metric snapshot answers "did the server ever see the
+        # sweep land?" without grepping serve logs
+        self._registry = registry if registry is not None else get_registry()
 
     @property
     def token(self) -> str:
@@ -59,10 +65,12 @@ class LibraryWatcher:
         if self.min_poll_s > 0 and now - self._last_poll < self.min_poll_s:
             return False
         self._last_poll = now
+        self._registry.counter("watcher_polls_total").inc()
         token = self.store.version_token()
         if token == self._token:
             return False
         self._token = token
+        self._registry.counter("watcher_changes_total").inc()
         return True
 
     def load_frontier(self):
@@ -73,6 +81,7 @@ class LibraryWatcher:
         :class:`LookupError` if the store lost its multipliers (the
         caller keeps serving on the old plan)."""
         self.refreshes += 1
+        self._registry.counter("watcher_refreshes_total").inc()
         if self.widths is not None:
             from ..precision.plans import load_mixed_frontier
 
