@@ -80,6 +80,38 @@ comparison).  During the serve, shadow-step drift samples feed an online
 per-layer EWMA estimator (``repro.sensitivity.online``) that keeps the
 measured profile fresh.
 
+Production serving
+------------------
+``--continuous`` upgrades any serve from batch-boundary admission to
+continuous batching: a fixed pool of ``--max-slots`` decode slots that
+requests join and leave *per step* (an active-mask over the same jitted
+decode step — still exactly one trace), with KV in a paged pool
+(``--page-size``/``--pages``, per-request page tables, free-list reuse)
+so heterogeneous prompts (``--prompt-dist "bimodal:4-16"``) cost only the
+pages they use.  A QoS class may attach a latency SLO to its drift
+budget — ``gold:0.02@8ms`` means "p95 ms-per-step under 8 ms" — and SLO
+classes *preempt*: when the pool is full, a gold arrival suspends the
+worst lower-tier slot, which keeps its pages (no re-prefill) and resumes
+from the head of its queue.  Admission drains the class queues
+weighted-fair instead of strictly by priority, so ``batch`` never
+starves.  Telemetry adds per-request TTFT histograms per class,
+preemption counts, and slot occupancy:
+
+    python -m repro.launch.serve --reduced --continuous --library runs/lib \
+        --profile runs/lib/_profiles/gemma3-1b.json \
+        --qos-class "gold:0.02@8ms,batch:0.5" --class-mix "gold:0.3,batch:0.7" \
+        --max-slots 8 --prompt-dist "bimodal:4-16" --schedule spike \
+        --compare-fixed --bench-json BENCH_slo.json
+
+``--compare-fixed`` serves the identical profile on the fixed-batch
+engine first and emits paired rows (``compare`` in the bench JSON):
+steady-state decode tok/s and per-class p95 ms-per-step, fixed vs
+continuous.  ``--replicas N`` fronts N continuous engines with a
+class-affinity router — each replica keeps its own plan state (one can
+hold gold on exact tiles while another soaks batch traffic on W8A8)
+while a single watched :class:`~repro.library.store.OperatorStore` feeds
+frontier refreshes to all of them.
+
 Observability
 -------------
 Everything above can run under one trace.  ``--trace DIR`` (on both the

@@ -18,6 +18,16 @@ Three serving modes:
   background ``python -m repro.fleet`` sweep adds mid-serve.  The decode
   step never retraces across swaps.
 
+``--continuous`` switches any mode from batch-boundary admission to
+continuous batching over a fixed pool of ``--max-slots`` decode slots
+with paged KV (``--page-size`` / ``--pages``): requests join and leave
+the running batch per step, classes declaring a latency SLO
+(``--qos-class "gold:0.02@8ms,batch:0.2"``) preempt lower tiers, and
+``--prompt-dist "bimodal:4-16"`` makes arrivals heterogeneous in length.
+``--compare-fixed`` runs the fixed-batch engine on the *same* profile
+first and emits paired rows; ``--replicas N`` fronts N engines (sharing
+one watched store, per-replica plan state) with a class-affinity router.
+
 ``--width`` picks the LUT operand width for any library mode: 4 serves
 W4A4 on the native 16x16 tables, 8 serves W8A8 on 256x256 tables composed
 from the same searched blocks (:mod:`repro.precision`); all three modes
@@ -57,13 +67,17 @@ from ..obs.export import dump_metrics, write_bench_json
 from ..obs.metrics import MetricRegistry, get_registry
 from ..obs.trace import configure as configure_tracing
 from ..serving import (
+    ContinuousServingEngine,
     ControllerConfig,
     LibraryWatcher,
     PlanLadder,
     QoSController,
+    Replica,
+    ReplicaRouter,
     ServingEngine,
     Telemetry,
     make_profile,
+    parse_prompt_dist,
 )
 from ..serving.loadgen import PROFILES
 from .mesh import make_smoke_mesh
@@ -159,6 +173,34 @@ def main() -> None:
     ap.add_argument("--per-tick", type=int, default=None,
                     help="arrivals per tick (steady) / peak (ramp, spike); "
                          "default: --batch")
+    ap.add_argument("--prompt-dist", default=None, metavar="SPEC",
+                    help='heterogeneous prompt lengths, "kind:lo-hi" with '
+                         'kind uniform|bimodal (e.g. "bimodal:4-16"); '
+                         "deterministic per seed, truncation-stable vs "
+                         "fixed-length prompts")
+    # ---- continuous batching ---------------------------------------------
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: token-level admission over a "
+                         "fixed slot pool with paged KV; requests join/"
+                         "leave per step, SLO classes (--qos-class "
+                         '"gold:0.02@8ms") preempt lower tiers')
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="decode-slot pool size (default: --batch)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="KV page size in cache positions")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="KV page-pool size (default: every slot's worst "
+                         "case plus one slot of preemption headroom)")
+    ap.add_argument("--steps-per-tick", type=int, default=None,
+                    help="decode steps between arrival ticks "
+                         "(default: --gen-len)")
+    ap.add_argument("--compare-fixed", action="store_true",
+                    help="also serve the same profile on the fixed-batch "
+                         "engine and emit paired fixed-vs-continuous rows "
+                         "in the bench summary")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">=2 fronts that many continuous engines with a "
+                         "class-affinity router sharing one watched store")
     # ---- adaptive runtime -------------------------------------------------
     ap.add_argument("--adaptive", action="store_true",
                     help="QoS controller walks the operator frontier between "
@@ -213,6 +255,24 @@ def main() -> None:
     if args.mixed_width and args.width != 4:
         raise SystemExit("--mixed-width chooses per-layer widths itself; "
                          "drop --width")
+    if not args.continuous and (
+            args.max_slots is not None or args.pages is not None
+            or args.steps_per_tick is not None or args.compare_fixed
+            or args.replicas > 1):
+        raise SystemExit("--max-slots/--pages/--steps-per-tick/"
+                         "--compare-fixed/--replicas require --continuous")
+    if args.replicas < 1:
+        raise SystemExit(f"--replicas must be >= 1, got {args.replicas}")
+    if args.compare_fixed and args.replicas > 1:
+        raise SystemExit("--compare-fixed compares single engines; "
+                         "drop --replicas")
+    prompt_dist = None
+    if args.prompt_dist:
+        try:
+            prompt_dist = parse_prompt_dist(args.prompt_dist,
+                                            args.prompt_len)
+        except ValueError as e:
+            raise SystemExit(f"--prompt-dist: {e}")
 
     profile_obj = None
     if args.profile:
@@ -224,7 +284,7 @@ def main() -> None:
     plan = compiled = exact_area = controller = watcher = None
     ladder = scheduler = online = None
     mixed_report = width_map = None
-    class_mix = None
+    class_mix = book = None
     if args.library:
         from ..precision.plans import select_width
         from ..sensitivity.profile import costs_for
@@ -336,7 +396,9 @@ def main() -> None:
                          else book.equal_mix())
             tiers = ", ".join(
                 f"{c.name}(budget {c.drift_budget}, cap level "
-                f"{scheduler.cap(c.name)})" for c in book)
+                f"{scheduler.cap(c.name)}"
+                + (f", SLO {c.slo_ms}ms" if c.slo_ms is not None else "")
+                + ")" for c in book)
             print(f"QoS classes: {tiers}")
         if args.adaptive or args.qos_class:
             from ..sensitivity import OnlineSensitivity
@@ -347,12 +409,41 @@ def main() -> None:
             else:
                 online = OnlineSensitivity(cfg.n_layers)
 
+    def fresh_control():
+        """A fresh controller/scheduler/online triple.  QoS state (EWMA,
+        hysteresis, per-class backoff, online sensitivities) is strictly
+        per-engine, so the --compare-fixed baseline and every extra
+        --replicas engine each get their own."""
+        c = sc = on = None
+        if args.adaptive:
+            c = QoSController(ladder, ControllerConfig(
+                target_ms_per_step=args.target_ms_per_step,
+                drift_budget=args.drift_budget,
+                shadow_every=args.shadow_every))
+        if args.qos_class:
+            from ..sensitivity.classes import ClassScheduler
+
+            sc = ClassScheduler(book, ladder,
+                                shadow_every=args.shadow_every)
+        if args.adaptive or args.qos_class:
+            from ..sensitivity import OnlineSensitivity
+
+            on = (OnlineSensitivity.from_profile(
+                profile_obj, args.width, width_map=width_map)
+                if profile_obj is not None
+                else OnlineSensitivity(cfg.n_layers))
+        return c, sc, on
+
     mesh = make_smoke_mesh()
     key = jax.random.PRNGKey(args.seed)
     profile = make_profile(args.schedule, ticks=args.ticks,
                            per_tick=args.per_tick or args.batch,
                            prompt_len=args.prompt_len, gen_len=args.gen_len,
-                           class_mix=class_mix)
+                           class_mix=class_mix, prompt_dist=prompt_dist)
+
+    if args.continuous and cfg.family == "audio":
+        raise SystemExit("--continuous: continuous batching serves LM "
+                         "families only (paged decode)")
 
     with parallel.activate(mesh), mesh:
         params = init_model(cfg, key)
@@ -365,38 +456,127 @@ def main() -> None:
                                  DataState(args.seed, 0))["frames"]
             warmup = lambda caches: prefill_cross(cfg, params, frames, caches)
 
-        engine = ServingEngine(
-            cfg, params, batch=args.batch, prompt_len=args.prompt_len,
-            gen_len=args.gen_len, plan=plan, compiled=compiled,
-            exact_area=exact_area, warmup_caches=warmup,
+        common = dict(
+            plan=plan, compiled=compiled, exact_area=exact_area,
             width_map=width_map,
             sensitivities=(engine_sens if args.library and args.mixed_width
                            else None),
             sens_profile=profile_obj,
         )
-        t0 = time.time()
-        telemetry = engine.serve(profile, controller=controller,
-                                 watcher=watcher, scheduler=scheduler,
-                                 online=online, telemetry=Telemetry(),
-                                 seed=args.seed, log=print)
-        wall = time.time() - t0
+        router = None
+        fixed_row = None
+        if args.continuous:
+            max_slots = args.max_slots or args.batch
 
-    s = telemetry.summary()
-    print(f"arch={cfg.name} profile={profile.name} "
-          f"batches={s['batches']} requests={s['requests']} "
-          f"wall={wall:.2f}s")
-    print(f"  decode : {s['decode_tok_s']:.1f} tok/s "
-          f"({s['ms_per_step']:.1f} ms/step)")
-    print(f"  prefill: {s['prefill_tok_s']:.1f} tok/s "
-          f"(python-loop prefill, timed separately from decode)")
-    if engine.last_tokens is not None:
-        print("sample:", engine.last_tokens[0, :16].tolist())
-    if engine.plan is not None:
+            def make_engine():
+                return ContinuousServingEngine(
+                    cfg, params, max_slots=max_slots,
+                    prompt_len=args.prompt_len, gen_len=args.gen_len,
+                    page_size=args.page_size, n_pages=args.pages,
+                    steps_per_tick=args.steps_per_tick, **common)
+
+            if args.compare_fixed:
+                # same model, same profile, same (fresh) control plane —
+                # the only variable is the batching discipline
+                fc, fs, fo = fresh_control()
+                baseline = ServingEngine(
+                    cfg, params, batch=args.batch,
+                    prompt_len=args.prompt_len, gen_len=args.gen_len,
+                    **common)
+                tb = time.time()
+                fixed_row = baseline.serve(
+                    profile, controller=fc, scheduler=fs, online=fo,
+                    telemetry=Telemetry(), seed=args.seed).summary()
+                fixed_row["wall_s"] = round(time.time() - tb, 3)
+                fixed_row["mode"] = "fixed"
+                fixed_row["batch"] = args.batch
+                fixed_row["trace_count"] = baseline.trace_count
+
+            if args.replicas > 1:
+                class_names = ([c.name for c in book]
+                               if book is not None else [])
+                replicas = []
+                for i in range(args.replicas):
+                    c, sc, on = ((controller, scheduler, online) if i == 0
+                                 else fresh_control())
+                    aff = tuple(n for j, n in enumerate(class_names)
+                                if j % args.replicas == i)
+                    replicas.append(Replica(
+                        f"replica{i}", make_engine(), controller=c,
+                        scheduler=sc, online=on, classes=aff))
+                router = ReplicaRouter(replicas, watcher=watcher)
+                t0 = time.time()
+                s = router.serve(profile, seed=args.seed,
+                                 steps_per_tick=args.steps_per_tick,
+                                 log=print)
+                wall = time.time() - t0
+                engine = replicas[0].engine
+                telemetry = replicas[0].telemetry
+            else:
+                engine = make_engine()
+                t0 = time.time()
+                telemetry = engine.serve(
+                    profile, controller=controller, watcher=watcher,
+                    scheduler=scheduler, online=online,
+                    telemetry=Telemetry(), seed=args.seed,
+                    steps_per_tick=args.steps_per_tick, log=print)
+                wall = time.time() - t0
+        else:
+            engine = ServingEngine(
+                cfg, params, batch=args.batch, prompt_len=args.prompt_len,
+                gen_len=args.gen_len, warmup_caches=warmup, **common)
+            t0 = time.time()
+            telemetry = engine.serve(profile, controller=controller,
+                                     watcher=watcher, scheduler=scheduler,
+                                     online=online, telemetry=Telemetry(),
+                                     seed=args.seed, log=print)
+            wall = time.time() - t0
+
+    if router is not None:
+        print(f"arch={cfg.name} profile={profile.name} mode=router "
+              f"replicas={args.replicas} requests={s['requests']} "
+              f"preemptions={s.get('preemptions', 0)} wall={wall:.2f}s")
+        for name, row in s["replicas"].items():
+            print(f"  {name:<10s}: routed {row['routed']}, "
+                  f"{row['decode_tok_s']:.1f} tok/s, "
+                  f"{row['ms_per_step']:.2f} ms/step, "
+                  f"trace {row['trace_count']}x"
+                  + (f", plan {row['plan']}" if "plan" in row else ""))
+        s["mode"] = "router"
+    else:
+        s = telemetry.summary()
+    if router is not None:
+        pass
+    elif args.continuous:
+        print(f"arch={cfg.name} profile={profile.name} mode=continuous "
+              f"slots={engine.max_slots} steps={s.get('steps', 0)} "
+              f"requests={s['requests']} wall={wall:.2f}s")
+        lat = s.get("latency_ms_per_step", {})
+        print(f"  decode : {s['decode_tok_s']:.1f} tok/s "
+              f"({s['ms_per_step']:.2f} ms/step"
+              + (f", p95 {lat['p95']}" if "p95" in lat else "") + ")")
+        if "ttft_ms" in s:
+            print(f"  ttft   : p50 {s['ttft_ms']['p50']} ms, "
+                  f"p95 {s['ttft_ms']['p95']} ms")
+        if s.get("preemptions"):
+            print(f"  preemptions: {s['preemptions']}")
+    else:
+        print(f"arch={cfg.name} profile={profile.name} "
+              f"batches={s['batches']} requests={s['requests']} "
+              f"wall={wall:.2f}s")
+        print(f"  decode : {s['decode_tok_s']:.1f} tok/s "
+              f"({s['ms_per_step']:.1f} ms/step)")
+        print(f"  prefill: {s['prefill_tok_s']:.1f} tok/s "
+              f"(python-loop prefill, timed separately from decode)")
+        if engine.last_tokens is not None:
+            print("sample:", engine.last_tokens[0, :16].tolist())
+    if router is None and engine.plan is not None:
         print(f"  plan swaps: {s['swaps']} {s['swaps_by_reason']} — decode "
               f"step traced {engine.trace_count}x")
-    if scheduler is not None:
+    if scheduler is not None and router is None:
         for name, row in s.get("classes", {}).items():
             budget = scheduler.book.get(name).drift_budget
+            slo = scheduler.book.get(name).slo_ms
             drift = row.get("mean_drift")
             p95 = row.get("p95_ms_per_step")
             print(f"  class {name:<8s}: {row['requests']} req, "
@@ -405,26 +585,67 @@ def main() -> None:
                      f"p99 {row['p99_ms_per_step']})" if p95 is not None
                      else "")
                   + f", mean drift {'-' if drift is None else drift} "
-                  f"(budget {budget})")
+                  f"(budget {budget})"
+                  + (f", SLO {slo}ms "
+                     + ("OK" if p95 is not None and p95 <= slo else "MISS")
+                     if slo is not None else ""))
     if online is not None and online.n_updates:
         print(f"  online sensitivities ({online.n_updates} samples): "
               f"{np.round(online.sensitivities(), 4).tolist()}")
     if args.telemetry:
         telemetry.dump(args.telemetry)
         print(f"telemetry -> {args.telemetry}")
-    if engine.plan is not None:
+    if router is None and engine.plan is not None:
         # routing facts for smoke gates: the serving width and how many
         # layers actually run a searched (non-exact) operator
         s["width_bits"] = engine.width.bits if engine.width else None
         s["widths"] = list(engine.widths)
         s["approx_layers"] = sum(
             1 for c in engine.plan.choices if c.key is not None)
+    if router is None:
         s["trace_count"] = engine.trace_count
+    if router is None and args.continuous:
+        s["mode"] = "continuous"
+        s["max_slots"] = engine.max_slots
+        s["page_size"] = engine.page_size
+        s["n_pages"] = engine.n_pages
+        if fixed_row is not None:
+            # the paired rows the acceptance gate reads: same model, same
+            # profile, only the batching discipline differs
+            cmp = {"fixed": fixed_row}
+            if fixed_row.get("decode_tok_s"):
+                cmp["decode_tok_s_gain"] = round(
+                    s["decode_tok_s"] / fixed_row["decode_tok_s"] - 1, 4)
+            fp50 = fixed_row.get("decode_tok_s_pct", {}).get("p50")
+            cp50 = s.get("decode_tok_s_pct", {}).get("p50")
+            if fp50 and cp50:
+                # steady-state (median per-observation) throughput gain:
+                # robust to the one-off trace/compile step both engines pay
+                cmp["decode_tok_s_p50_gain"] = round(cp50 / fp50 - 1, 4)
+            p95g = {}
+            for cname, crow in s.get("classes", {}).items():
+                frow = fixed_row.get("classes", {}).get(cname, {})
+                if crow.get("p95_ms_per_step") and frow.get(
+                        "p95_ms_per_step"):
+                    p95g[cname] = round(
+                        1 - crow["p95_ms_per_step"]
+                        / frow["p95_ms_per_step"], 4)
+            if p95g:
+                cmp["p95_ms_per_step_reduction"] = p95g
+            s["compare"] = cmp
+            print(f"  vs fixed: decode {fixed_row['decode_tok_s']:.1f} -> "
+                  f"{s['decode_tok_s']:.1f} tok/s "
+                  f"({100 * cmp.get('decode_tok_s_gain', 0.0):+.1f}%"
+                  + (f"; steady-state p50 "
+                     f"{100 * cmp['decode_tok_s_p50_gain']:+.1f}%"
+                     if "decode_tok_s_p50_gain" in cmp else "") + ")"
+                  + (f", p95 ms/step reduction {p95g}" if p95g else ""))
     if mixed_report is not None:
         s["mixed"] = mixed_report
-    if scheduler is not None:
+    if scheduler is not None and router is None:
         for name, row in s.get("classes", {}).items():
             row["drift_budget"] = scheduler.book.get(name).drift_budget
+            row["slo_ms"] = scheduler.book.get(name).slo_ms
         s["class_state"] = scheduler.snapshot(
             controller.level if controller is not None else None)
     if online is not None and online.n_updates:
@@ -434,9 +655,14 @@ def main() -> None:
         # the serve-side metric snapshot joins any fleet-side ones already
         # in the dir: per-batch latency/throughput histograms (telemetry's
         # own registry) plus the process registry the watcher and class
-        # scheduler record into
-        merged = MetricRegistry.from_snapshots(
-            [get_registry().snapshot(), telemetry.registry.snapshot()])
+        # scheduler record into; a router merges every replica's registry
+        snaps = [get_registry().snapshot()]
+        if router is not None:
+            snaps += [r.telemetry.registry.snapshot()
+                      for r in router.replicas]
+        else:
+            snaps.append(telemetry.registry.snapshot())
+        merged = MetricRegistry.from_snapshots(snaps)
         dump_metrics(args.trace, merged)
         print(f"trace -> {args.trace}")
     if args.bench_json:

@@ -30,6 +30,21 @@ def decode_fn(cfg: ModelConfig):
     return encdec.decode_step_encdec if cfg.family == "audio" else lm.decode_step
 
 
+def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
+                      page_size: int, max_len: int):
+    """Page-pool decode caches for continuous batching (LM families only)."""
+    if cfg.family == "audio":
+        raise ValueError("continuous batching serves LM families only")
+    return lm.init_paged_caches(cfg, batch, n_pages, page_size, max_len)
+
+
+def decode_paged_fn(cfg: ModelConfig):
+    """Per-slot-position decode step over paged caches (LM families only)."""
+    if cfg.family == "audio":
+        raise ValueError("continuous batching serves LM families only")
+    return lm.decode_step_paged
+
+
 __all__ = [
     "ModelConfig",
     "ShapeConfig",
@@ -39,4 +54,6 @@ __all__ = [
     "forward_fn",
     "init_caches",
     "decode_fn",
+    "init_paged_caches",
+    "decode_paged_fn",
 ]

@@ -320,6 +320,210 @@ def mla_attention_decode(
 
 
 # ---------------------------------------------------------------------------
+# paged / per-row decode attention (continuous batching)
+#
+# The fixed-batch decode path above shares one scalar ``pos`` across the
+# whole batch.  Continuous batching mixes requests at *different* sequence
+# positions in one step, so these variants take ``pos`` as a (B,) vector
+# plus an ``active`` (B,) mask; global-attention KV lives in a shared page
+# pool indexed by per-slot page tables (repro.serving.kvcache) instead of
+# a dense per-slot cache.  Everything stays pure jnp gather/scatter —
+# shapes are fixed by (max_slots, pages_per_slot, page_size), so the
+# serving engine's single-trace contract survives joins and leaves.
+# ---------------------------------------------------------------------------
+def _decode_attn_rows(q, k, v, mask, f32_math: bool = True):
+    """Single-token attention with a per-row key mask.
+
+    q (B, 1, H, hd); k/v (B, K, Hkv, hd); mask (B, K) bool — True where
+    row b may attend to key slot j.  The caller guarantees every row has
+    at least one True (inactive rows point at one masked-garbage slot so
+    the softmax never sees an all ``-inf`` row).
+    """
+    B, _, H, hd = q.shape
+    out_dtype = q.dtype
+    Hkv = k.shape[2]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+    scale = 1.0 / np.sqrt(hd)
+    if f32_math:
+        q, k = q.astype(jnp.float32), k.astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if f32_math:
+        v = v.astype(jnp.float32)
+    else:
+        probs = probs.astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                     preferred_element_type=jnp.float32)
+    out = shard(out, "batch", None, "model", None)
+    return out.astype(out_dtype)
+
+
+def _rows_rope(x, pos, head_dim, theta):
+    """Per-row rope for single-token decode: x (B, 1, H, hd), pos (B,)."""
+    cos, sin = rope_tables(pos, head_dim, theta)      # (B, hd//2)
+    return apply_rope(x, cos[:, None], sin[:, None])
+
+
+def attention_decode_ring(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                  # (B, 1, D)
+    cache: dict[str, jax.Array],   # {"k","v"}: (B, C, Hkv, hd) per-slot ring
+    pos: jax.Array,                # (B,) int32 — per-slot absolute position
+    active: jax.Array,             # (B,) bool
+    window: int,                   # ring capacity == attention window
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Sliding-window decode with *per-row* positions.  The ring layout
+    is unchanged from :func:`attention_decode` (slot ``pos % C`` holds the
+    newest token); only the position arithmetic became row-wise.  A slot
+    whose occupant just joined at ``pos=0`` masks out every stale ring
+    entry the previous occupant left behind — validity is derived from
+    ``pos``, never from what the buffer happens to contain."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(cfg, p, x)
+    q = _rows_rope(q, pos, cfg.hd, cfg.rope_theta)
+    k_new = _rows_rope(k_new, pos, cfg.hd, cfg.rope_theta)
+
+    C = cache["k"].shape[1]
+    slot = pos % C
+    rows = jnp.arange(B)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0])
+    v = cache["v"].at[rows, slot].set(v_new[:, 0])
+    new_cache = {"k": k, "v": v}
+
+    idx = jnp.arange(C)[None, :]                       # (1, C)
+    pos_c, slot_c = pos[:, None], slot[:, None]
+    # ring slot i holds absolute position in (pos - C, pos]
+    k_pos = jnp.where(idx <= slot_c, pos_c - slot_c + idx,
+                      pos_c - slot_c - C + idx)
+    mask = (k_pos >= 0) & (k_pos > pos_c - C - 1)
+    # inactive rows attend to exactly slot 0 (output discarded, but the
+    # softmax must not see an empty row)
+    mask = jnp.where(active[:, None], mask, idx == 0)
+    out = _decode_attn_rows(q, k, v, mask, f32_math=cfg.attn_f32)
+    out = linear(out.reshape(B, 1, -1), p["wo"])
+    return out, new_cache
+
+
+def _paged_write(pool: jax.Array, new_row: jax.Array, pos: jax.Array,
+                 tables: jax.Array) -> jax.Array:
+    """Scatter one new per-slot row into the shared page pool.
+
+    pool (P+1, page_size, ...); new_row (B, ...); pos (B,); tables
+    (B, T) physical page ids.  Inactive slots carry all-scratch tables
+    and ``pos=0``, so their writes land on the reserved scratch page —
+    duplicate scratch writes race benignly (nobody reads it unmasked).
+    """
+    page_size = pool.shape[1]
+    page = jnp.take_along_axis(tables, (pos // page_size)[:, None],
+                               axis=1)[:, 0]
+    return pool.at[page, pos % page_size].set(new_row)
+
+
+def _paged_read(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """Gather each slot's pages back into a contiguous per-slot view:
+    pool (P+1, page_size, ...) + tables (B, T) -> (B, T*page_size, ...)."""
+    B, T = tables.shape
+    v = pool[tables]                                  # (B, T, page_size, ...)
+    return v.reshape((B, T * pool.shape[1]) + pool.shape[2:])
+
+
+def attention_decode_paged(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                  # (B, 1, D)
+    cache: dict[str, jax.Array],   # {"kp","vp"}: (P+1, page_size, Hkv, hd)
+    pos: jax.Array,                # (B,) int32
+    tables: jax.Array,             # (B, T) int32 physical page ids
+    active: jax.Array,             # (B,) bool
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Global-attention decode over the shared page pool.  Each slot
+    writes its new KV at ``table[pos // page_size], pos % page_size`` and
+    attends over the gathered view of its own pages; positions a request
+    has not written yet (stale KV from a freed request included) are
+    masked by ``j <= pos``, so page *reuse* needs no zeroing."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(cfg, p, x)
+    q = _rows_rope(q, pos, cfg.hd, cfg.rope_theta)
+    k_new = _rows_rope(k_new, pos, cfg.hd, cfg.rope_theta)
+
+    kp = _paged_write(cache["kp"], k_new[:, 0], pos, tables)
+    vp = _paged_write(cache["vp"], v_new[:, 0], pos, tables)
+    new_cache = {"kp": kp, "vp": vp}
+
+    k = _paged_read(kp, tables)                       # (B, K, Hkv, hd)
+    v = _paged_read(vp, tables)
+    idx = jnp.arange(k.shape[1])[None, :]             # logical positions
+    mask = idx <= pos[:, None]
+    mask = jnp.where(active[:, None], mask, idx == 0)
+    out = _decode_attn_rows(q, k, v, mask, f32_math=cfg.attn_f32)
+    out = linear(out.reshape(B, 1, -1), p["wo"])
+    return out, new_cache
+
+
+def mla_attention_decode_paged(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                  # (B, 1, D)
+    cache: dict[str, jax.Array],   # {"ckvp": (P+1, S, R), "krp": (P+1, S, rd)}
+    pos: jax.Array,                # (B,) int32
+    tables: jax.Array,             # (B, T) int32
+    active: jax.Array,             # (B,) bool
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Absorbed-matrix MLA decode over a paged compressed cache — the
+    same serving trick as :func:`mla_attention_decode`, with the
+    ``(B, C, R)`` dense cache replaced by a shared page pool."""
+    mla = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    nope, rope_d, vd, R = (
+        mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim,
+        mla.kv_lora_rank,
+    )
+    q = linear(x, p["wq"]).reshape(B, 1, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_tables(pos, rope_d, cfg.rope_theta)   # (B, rd//2)
+    q_rope = apply_rope(q_rope, cos[:, None], sin[:, None])
+
+    ckv_kr = linear(x, p["wdkv"])
+    c_new, kr_new = ckv_kr[..., :R], ckv_kr[..., R:]
+    kr_new = apply_rope(kr_new[:, :, None, :], cos[:, None],
+                        sin[:, None])[:, :, 0]
+    ckvp = _paged_write(cache["ckvp"], c_new[:, 0], pos, tables)
+    krp = _paged_write(cache["krp"], kr_new[:, 0], pos, tables)
+    new_cache = {"ckvp": ckvp, "krp": krp}
+
+    ckv = _paged_read(ckvp, tables)                   # (B, K, R)
+    kr = _paged_read(krp, tables)                     # (B, K, rope_d)
+    wuk = p["wuk"].reshape(R, H, nope)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    scale = 1.0 / np.sqrt(nope + rope_d)
+    logits = (
+        jnp.einsum("bhr,bcr->bhc", q_abs, ckv.astype(jnp.float32))
+        + jnp.einsum("bhd,bcd->bhc", q_rope[:, 0].astype(jnp.float32),
+                     kr.astype(jnp.float32))
+    ) * scale
+    idx = jnp.arange(ckv.shape[1])[None, :]
+    mask = idx <= pos[:, None]
+    mask = jnp.where(active[:, None], mask, idx == 0)
+    logits = jnp.where(mask[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhc,bcr->bhr", probs, ckv.astype(jnp.float32))
+    wuv = p["wuv"].reshape(R, H, vd)
+    out = jnp.einsum("bhr,rhv->bhv", ctx, wuv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * vd).astype(x.dtype)
+    return linear(out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
 # dense FFN (SwiGLU / GELU)
 # ---------------------------------------------------------------------------
 def init_ffn(cfg: ModelConfig, key, *, gelu: bool = False, d_ff: int | None = None) -> Params:

@@ -237,6 +237,48 @@ def init_decode_caches(cfg: ModelConfig, batch: int, seq_len: int) -> list[Param
     return caches
 
 
+def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
+                      page_size: int, max_len: int) -> list[Params]:
+    """Decode caches for continuous batching: global-attention layers
+    share one ``(n_pages + 1, page_size, ...)`` page *pool* (physical
+    page 0 is the allocator's scratch page), sliding-window layers keep a
+    small per-slot ring (their cache is already bounded by the window —
+    paging it would buy nothing), and ``max_len`` bounds the per-request
+    page-table width.  Recurrent state (RWKV / SSM) cannot be paged or
+    resumed from KV alone, so those families are rejected here rather
+    than silently served wrong."""
+    if cfg.rwkv is not None or cfg.ssm is not None:
+        raise ValueError(
+            f"{cfg.name}: continuous batching pages KV caches; recurrent "
+            f"state (rwkv/ssm) has no positional cache to page — use the "
+            f"fixed-batch engine for this family")
+    win = window_schedule(cfg)
+    dt = cfg.jnp_dtype
+    caches: list[Params] = []
+    for layer in range(cfg.n_layers):
+        c: Params = {}
+        if cfg.mla is not None:
+            mla = cfg.mla
+            c["ckvp"] = jnp.zeros((n_pages + 1, page_size,
+                                   mla.kv_lora_rank), dt)
+            c["krp"] = jnp.zeros((n_pages + 1, page_size,
+                                  mla.qk_rope_head_dim), dt)
+        else:
+            w = (int(win[layer]) if isinstance(win, np.ndarray)
+                 else win if isinstance(win, int) else -1)
+            if w is not None and w > 0:
+                slots = min(w, max_len)
+                c["k"] = jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.hd), dt)
+                c["v"] = jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.hd), dt)
+            else:
+                c["kp"] = jnp.zeros((n_pages + 1, page_size,
+                                     cfg.n_kv_heads, cfg.hd), dt)
+                c["vp"] = jnp.zeros((n_pages + 1, page_size,
+                                     cfg.n_kv_heads, cfg.hd), dt)
+        caches.append(c)
+    return caches
+
+
 def shard_decode_caches(caches: list[Params], cfg: ModelConfig) -> list[Params]:
     """Apply logical sharding to caches: batch over data when divisible,
     else context-parallel over the cache-sequence axis (long_500k, B=1)."""
@@ -370,6 +412,101 @@ def decode_step(
         elif luts_ is not None:
             lut_i = luts_[i] if jnp.ndim(luts_) == 3 else luts_
         x, nc = _block_decode(cfg, lp, x, cache, pos, w, lut_i)
+        new_caches.append(nc)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)[:, 0]
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# paged decode: per-slot positions, shared page pools (continuous batching)
+# ---------------------------------------------------------------------------
+def _block_decode_paged(cfg: ModelConfig, lp: Params, x, cache: Params,
+                        pos, tables, active, window, lut=None):
+    new_cache = dict(cache)
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        attn_out, upd = L.mla_attention_decode_paged(
+            cfg, lp["attn"], h, cache, pos, tables, active)
+    elif "kp" in cache:
+        attn_out, upd = L.attention_decode_paged(
+            cfg, lp["attn"], h, cache, pos, tables, active)
+    else:
+        attn_out, upd = L.attention_decode_ring(
+            cfg, lp["attn"], h, cache, pos, active, window)
+    new_cache.update(upd)
+    x = x + attn_out
+
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        mlp_out, _ = L.moe_ffn(cfg, lp["moe"], h, lut, dropless=True)
+    else:
+        mlp_out = L.ffn(cfg, lp["ffn"], h, lut)
+    return x + mlp_out, new_cache
+
+
+def decode_step_paged(
+    cfg: ModelConfig,
+    params: Params,
+    caches: list[Params],
+    tokens: jax.Array,   # (B, 1) int32 — each slot's newest token
+    pos: jax.Array,      # (B,) int32 — per-slot absolute positions
+    active: jax.Array,   # (B,) bool — which slots hold a live request
+    tables: jax.Array,   # (B, T) int32 — per-slot physical page tables
+    *,
+    luts: jax.Array | dict[int, jax.Array] | None = None,
+    width_map: tuple[int, ...] | None = None,
+) -> tuple[jax.Array, list[Params]]:
+    """One continuous-batching step: every *active* slot advances one
+    token at its own position; inactive slots compute padding rows whose
+    cache writes land on the scratch page (page 0) and whose logits the
+    host discards.
+
+    This is :func:`decode_step` with the batch-shared scalar ``pos``
+    replaced by per-slot vectors and the dense global-attention caches
+    replaced by page pools (:func:`init_paged_caches`); the LUT-stack
+    contract is identical — ``luts`` rides as a jitted argument (same
+    TypeError guard), width maps are trace structure, and all shapes are
+    fixed by ``(max_slots, pages_per_slot, page_size)``, so requests
+    joining and leaving the running batch never retrace."""
+    win = window_schedule(cfg)
+    luts_ = luts if cfg.approx_mlp else None
+    leaves = luts_.values() if isinstance(luts_, dict) else (luts_,)
+    if any(isinstance(v, np.ndarray) for v in leaves):
+        raise TypeError(
+            "decode_step_paged luts must be a jax array passed as a jit "
+            "argument, not a numpy constant (serving hot-swap relies on this)"
+        )
+    group_pos: list[int] | None = None
+    if isinstance(luts_, dict):
+        if width_map is None or len(width_map) != cfg.n_layers:
+            raise ValueError(
+                f"a mixed-width luts dict needs a width_map with one entry "
+                f"per layer (got {width_map!r} for {cfg.n_layers} layers)"
+            )
+        group_pos = [width_map[:i].count(width_map[i])
+                     for i in range(cfg.n_layers)]
+    x = params["embed"][tokens].astype(cfg.jnp_dtype)
+    x = shard(x, "batch", None, None)
+    new_caches: list[Params] = []
+    layer_params = [
+        jax.tree.map(lambda a, i=i: a[i], params["layers"])
+        for i in range(cfg.n_layers)
+    ]
+    for i, (lp, cache) in enumerate(zip(layer_params, caches)):
+        if isinstance(win, np.ndarray):
+            w = int(win[i])
+            w = None if w < 0 else w
+        else:
+            w = win
+        lut_i = None
+        if isinstance(luts_, dict):
+            lut_i = luts_[width_map[i]][group_pos[i]]
+        elif luts_ is not None:
+            lut_i = luts_[i] if jnp.ndim(luts_) == 3 else luts_
+        x, nc = _block_decode_paged(cfg, lp, x, cache, pos, tables, active,
+                                    w, lut_i)
         new_caches.append(nc)
     x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]

@@ -15,7 +15,10 @@ invariant ``tests/test_sensitivity.py`` pins down.
 
 * :class:`QoSClass` / :class:`ClassBook` — the declared tiers, parsed
   from a CLI spec like ``gold:0.02,std:0.05,batch:0.2`` (listed order is
-  drain priority).
+  drain priority).  A tier may additionally declare a p95 ms-per-step
+  latency SLO — ``gold:0.02@8ms`` — which is what entitles its arrivals
+  to *preempt* lower tiers in the continuous-batching engine
+  (:mod:`repro.serving.slots`).
 * :class:`ClassScheduler` — per-class level resolution over a
   :class:`~repro.serving.controller.PlanLadder`: a *cap* (the deepest
   level whose predicted drift fits the class budget) plus a measured
@@ -43,11 +46,15 @@ __all__ = [
 @dataclass(frozen=True)
 class QoSClass:
     """One traffic tier: its name, drift budget (mean |Δlogit| vs the
-    exact shadow step) and drain priority (lower drains first)."""
+    exact shadow step), drain priority (lower drains first), and an
+    optional p95 ms-per-step latency SLO.  A declared ``slo_ms`` is a
+    *contract*, not a hint: under continuous batching it entitles this
+    tier's arrivals to preempt running lower-tier slots."""
 
     name: str
     drift_budget: float
     priority: int = 0
+    slo_ms: float | None = None
 
     def __post_init__(self) -> None:
         # ValueError (not assert): these come straight from CLI specs and
@@ -58,6 +65,10 @@ class QoSClass:
             raise ValueError(
                 f"class {self.name!r} has negative drift budget "
                 f"{self.drift_budget}")
+        if self.slo_ms is not None and self.slo_ms <= 0:
+            raise ValueError(
+                f"class {self.name!r} has non-positive latency SLO "
+                f"{self.slo_ms} ms")
 
 
 class ClassBook:
@@ -75,17 +86,24 @@ class ClassBook:
 
     @classmethod
     def parse(cls, spec: str) -> "ClassBook":
-        """``"gold:0.02,std:0.05,batch:0.2"`` — listed order is priority."""
+        """``"gold:0.02@8ms,std:0.05,batch:0.2"`` — listed order is
+        priority; an optional ``@<p95>ms`` suffix declares the tier's
+        per-step latency SLO (the ``ms`` unit tag itself is optional)."""
         classes = []
         for i, part in enumerate(p for p in spec.split(",") if p.strip()):
             try:
-                name, budget = part.split(":")
+                body, _, slo = part.partition("@")
+                name, budget = body.split(":")
                 budget = float(budget)
+                slo_ms = (float(slo.strip().removesuffix("ms"))
+                          if slo.strip() else None)
             except ValueError:
                 raise ValueError(
                     f"bad class spec {part!r} in {spec!r}; expected "
-                    f"name:drift_budget[,name:drift_budget...]") from None
-            classes.append(QoSClass(name.strip(), budget, priority=i))
+                    f"name:drift_budget[@p95ms][,...] "
+                    f"(e.g. gold:0.02@8ms,batch:0.2)") from None
+            classes.append(QoSClass(name.strip(), budget, priority=i,
+                                    slo_ms=slo_ms))
         return cls(classes)
 
     def __len__(self) -> int:
@@ -109,6 +127,15 @@ class ClassBook:
     def equal_mix(self) -> tuple[tuple[str, float], ...]:
         f = 1.0 / len(self.classes)
         return tuple((c.name, f) for c in self.classes)
+
+    def drain_weights(self) -> dict[str, int]:
+        """Default weighted-fair drain shares: each tier gets twice the
+        next one's (``2^(n-1-i)`` in priority order), so ``gold`` still
+        dominates but ``batch`` is never starved the way a strict
+        priority drain starves it under sustained high-tier load."""
+        n = len(self.classes)
+        return {c.name: 1 << (n - 1 - i)
+                for i, c in enumerate(self.classes)}
 
 
 def parse_class_mix(spec: str) -> tuple[tuple[str, float], ...]:
@@ -240,6 +267,7 @@ class ClassScheduler:
         return {
             c.name: {
                 "drift_budget": c.drift_budget,
+                "slo_ms": c.slo_ms,
                 "cap": self.cap(c.name),
                 "level": self.level_for(c.name, global_level),
                 "ewma_drift": round(self._drift[c.name], 6),

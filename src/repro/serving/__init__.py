@@ -26,7 +26,23 @@ recompiling the decode step.
   document for the bench trajectory (``BENCH_serve.json``).
 * :mod:`repro.serving.loadgen` — deterministic synthetic request
   schedules (steady / ramp / spike) so the whole loop is testable on CPU
-  with ``--reduced``; requests carry a QoS-class tag (``class_mix``).
+  with ``--reduced``; requests carry a QoS-class tag (``class_mix``) and
+  optionally heterogeneous prompt lengths (``prompt_dist``).
+
+The production serving tier layers continuous batching on top:
+
+* :mod:`repro.serving.kvcache` — paged KV block allocator (fixed-size
+  pages, per-request page tables, free-list reuse, hard alloc/free
+  invariants).
+* :mod:`repro.serving.slots` — the fixed decode-slot pool, per-request
+  decode state, and weighted-fair admission queues.
+* :class:`~repro.serving.engine.ContinuousServingEngine` — token-level
+  scheduling: requests join/leave the running batch per step via an
+  active-mask, SLO-carrying classes (``gold:0.02@8ms``) preempt lower
+  tiers (victims keep their pages and resume), all through the same
+  single-traced decode step.
+* :mod:`repro.serving.router` — a multi-replica front over engines
+  sharing one watched store with per-replica plan state.
 
 Class-aware and mixed-width serving plug in from
 :mod:`repro.sensitivity`: a
@@ -39,23 +55,38 @@ drift samples back into per-layer sensitivities, and a frozen per-layer
 (:func:`repro.precision.plans.build_mixed_ladder`).
 """
 
-from .controller import ControllerConfig, PlanLadder, QoSController
-from .engine import BatchStats, ServingEngine
-from .loadgen import LoadProfile, Request, make_profile, ramp, spike, steady
+from .controller import (ControllerConfig, PlanLadder, QoSController,
+                         effective_load_ms)
+from .engine import BatchStats, ContinuousServingEngine, ServingEngine
+from .kvcache import OutOfPages, PageAllocator
+from .loadgen import (LoadProfile, Request, make_profile, parse_prompt_dist,
+                      ramp, spike, steady)
+from .router import Replica, ReplicaRouter
+from .slots import SeqState, SlotPool, WeightedFairQueues
 from .telemetry import Telemetry
 from .watcher import LibraryWatcher
 
 __all__ = [
     "BatchStats",
+    "ContinuousServingEngine",
     "ControllerConfig",
     "LibraryWatcher",
     "LoadProfile",
+    "OutOfPages",
+    "PageAllocator",
     "PlanLadder",
     "QoSController",
+    "Replica",
+    "ReplicaRouter",
     "Request",
+    "SeqState",
     "ServingEngine",
+    "SlotPool",
     "Telemetry",
+    "WeightedFairQueues",
+    "effective_load_ms",
     "make_profile",
+    "parse_prompt_dist",
     "ramp",
     "spike",
     "steady",

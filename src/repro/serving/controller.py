@@ -29,7 +29,28 @@ import numpy as np
 
 from ..library.qos import LayerPlan, plan_ladder, stack_luts
 
-__all__ = ["ControllerConfig", "PlanLadder", "QoSController"]
+__all__ = ["ControllerConfig", "PlanLadder", "QoSController",
+           "effective_load_ms"]
+
+
+def effective_load_ms(raw_ms: float, *, backlog: int = 0, capacity: int = 1,
+                      occupancy: float | None = None) -> float:
+    """The Little's-law-flavoured load signal the controller observes.
+
+    Raw step latency is nearly plan-independent, so outstanding work is
+    what says "trade accuracy for throughput".  The fixed-batch loop
+    (``occupancy=None``) scales service time by whole-queue backlog:
+    ``raw * (1 + backlog / capacity)``.  Under continuous batching that
+    double-counts — most "backlog" is requests *already being served* —
+    so the signal becomes slot occupancy plus true admission-queue
+    depth: ``raw * (occupancy + backlog / capacity)``, where ``backlog``
+    counts only requests still waiting for a slot.  An idle continuous
+    pool therefore reports near-zero load instead of its raw step time,
+    and a full pool with an empty queue reports exactly ``raw``."""
+    cap = max(1, int(capacity))
+    if occupancy is None:
+        return raw_ms * (1.0 + backlog / cap)
+    return raw_ms * (float(occupancy) + backlog / cap)
 
 
 @dataclass(frozen=True)

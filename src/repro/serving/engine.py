@@ -42,10 +42,11 @@ from ..library.qos import LayerPlan, refresh_plan, stack_luts, validate_lut_stac
 from ..models import decode_fn, init_caches
 from ..obs.trace import event as trace_event
 from ..obs.trace import span as trace_span
+from .controller import effective_load_ms
 from .loadgen import LoadProfile, Request, synth_requests
 from .telemetry import Telemetry
 
-__all__ = ["BatchStats", "ServingEngine"]
+__all__ = ["BatchStats", "ServingEngine", "ContinuousServingEngine"]
 
 
 @dataclass
@@ -122,7 +123,6 @@ class ServingEngine:
         self._mae_by_key = {rec.key: comp.mae
                             for rec, comp in self._compiled}
 
-        step = decode_fn(cfg)
         if self._adaptive:
             assert cfg.approx_mlp, (
                 "adaptive serving routes MLP matmuls through LUTs; build the "
@@ -155,8 +155,22 @@ class ServingEngine:
                 self._exact_luts = jnp.asarray(np.broadcast_to(
                     exact_table("mul", self.width.bits).astype(np.int32),
                     (cfg.n_layers, side, side)).copy())
-            wm = self._width_map
+        else:
+            self._luts = None
+            self._exact_luts = None
+            self.width = None
+            self.widths = ()
 
+        self._jit_step = jax.jit(self._make_step_fn(), donate_argnums=(1,))
+
+    def _make_step_fn(self):
+        """Build the closure the engine jits exactly once.  Subclasses
+        (the continuous-batching engine) override this to route through a
+        different decode step; everything else — LUT stacking, swap
+        validation, watcher refresh — is shared."""
+        step = decode_fn(self.cfg)
+        cfg, wm = self.cfg, self._width_map
+        if self._adaptive:
             def step_fn(params, caches, tok, pos, luts):
                 # python side effect runs once per *trace*, so this counts
                 # compilations, not calls — the no-retrace-across-swaps
@@ -167,16 +181,10 @@ class ServingEngine:
                                 width_map=wm)
                 return step(cfg, params, caches, tok, pos, luts=luts)
         else:
-            self._luts = None
-            self._exact_luts = None
-            self.width = None
-            self.widths = ()
-
             def step_fn(params, caches, tok, pos):
                 self._trace_count += 1
                 return step(cfg, params, caches, tok, pos)
-
-        self._jit_step = jax.jit(step_fn, donate_argnums=(1,))
+        return step_fn
 
     # ----------------------------------------------------------------- state
     @property
@@ -357,7 +365,13 @@ class ServingEngine:
                     if isinstance(luts, dict) else jnp.asarray(luts))
         prompts_np = np.zeros((self.batch, self.prompt_len), np.int32)
         for i, r in enumerate(requests):
-            prompts_np[i] = r.tokens
+            # heterogeneous prompt lengths zero-pad to the fixed geometry:
+            # the fixed-batch engine pays max-length for every request,
+            # which is exactly the cost paged continuous batching removes
+            assert len(r.tokens) <= self.prompt_len, (
+                f"request {r.rid} prompt ({len(r.tokens)}) exceeds engine "
+                f"prompt_len ({self.prompt_len})")
+            prompts_np[i, :len(r.tokens)] = r.tokens
         prompts = jnp.asarray(prompts_np)
 
         caches = init_caches(self.cfg, self.batch, self.total)
@@ -590,7 +604,9 @@ class ServingEngine:
                     # raw step latency is nearly plan-independent, so a
                     # building queue, not the step clock, is what says
                     # "trade accuracy for throughput" under ramp/spike load
-                    eff_ms = stats.ms_per_step * (1.0 + backlog / self.batch)
+                    eff_ms = effective_load_ms(stats.ms_per_step,
+                                               backlog=backlog,
+                                               capacity=self.batch)
                     # with classes, the batch may have decoded below the
                     # global level (its class cap) — its drift then says
                     # nothing about the global operating point
@@ -633,4 +649,484 @@ class ServingEngine:
                 if on_batch_end is not None:
                     on_batch_end(self, batch_idx)
                 batch_idx += 1
+        return telemetry
+
+
+class ContinuousServingEngine(ServingEngine):
+    """Continuous batching over a fixed pool of decode slots.
+
+    The fixed-batch loop above admits requests only at batch boundaries:
+    an arrival one step after a batch starts waits out the whole batch,
+    and every slot reserves a full-length KV cache.  This engine decodes
+    token-at-a-time over ``max_slots`` slots — requests join and leave
+    the running batch *per step* through an active-mask, KV lives in a
+    paged pool (:mod:`repro.serving.kvcache`), and prefill is just the
+    first ``len(prompt)-1`` steps of a slot's life through the *same*
+    jitted step.  All step inputs (``tok``, ``pos``, ``active``,
+    ``tables``, the LUT stack) are plain jitted arguments with fixed
+    shapes, so the one-trace contract carries over verbatim: joins,
+    leaves, preemptions and plan swaps re-stack host arrays and never
+    retrace (``trace_count`` stays 1).
+
+    Latency SLOs: a :class:`~repro.sensitivity.classes.QoSClass` that
+    declares ``slo_ms`` (e.g. ``gold:0.02@8ms``) is entitled to a slot —
+    when the pool is full, its arrivals preempt the worst lower-tier
+    slot.  The victim keeps its pages (its paged KV survives untouched;
+    sliding-window ring rows are snapshotted host-side) and resumes from
+    the head of its class queue, so preemption costs a suspension, never
+    a re-prefill.  Admission itself drains the class queues weighted-
+    fair (:class:`~repro.serving.slots.WeightedFairQueues`) instead of
+    strictly by priority.
+    """
+
+    def __init__(self, cfg, params, *, max_slots: int, prompt_len: int,
+                 gen_len: int, page_size: int = 8, n_pages: int | None = None,
+                 steps_per_tick: int | None = None, **kw) -> None:
+        from ..models import init_paged_caches  # validates the family
+
+        assert kw.pop("warmup_caches", None) is None, (
+            "continuous batching serves LM families only")
+        self.max_slots = int(max_slots)
+        self.page_size = int(page_size)
+        total = int(prompt_len) + int(gen_len)
+        pages_per_req = -(-total // self.page_size)
+        # default pool: every slot can hold a worst-case request PLUS one
+        # spare slot's worth — preempted victims keep their pages, so
+        # without headroom an SLO arrival into a full pool could never
+        # allocate and preemption would be permanently page-blocked.
+        # Under-provisioned regimes (admission actually blocking) pass
+        # n_pages explicitly.
+        self.n_pages = ((self.max_slots + 1) * pages_per_req
+                        if n_pages is None else int(n_pages))
+        self.table_entries = pages_per_req
+        self.steps_per_tick = (int(steps_per_tick) if steps_per_tick
+                               else max(1, int(gen_len)))
+        self._init_paged_caches = init_paged_caches
+        super().__init__(cfg, params, batch=max_slots, prompt_len=prompt_len,
+                         gen_len=gen_len, **kw)
+        self._started = False
+
+    def _make_step_fn(self):
+        from ..models import decode_paged_fn
+
+        pstep = decode_paged_fn(self.cfg)
+        cfg, wm = self.cfg, self._width_map
+        if self._adaptive:
+            def step_fn(params, caches, tok, pos, active, tables, luts):
+                self._trace_count += 1
+                if wm is not None:
+                    return pstep(cfg, params, caches, tok, pos, active,
+                                 tables, luts=luts, width_map=wm)
+                return pstep(cfg, params, caches, tok, pos, active, tables,
+                             luts=luts)
+        else:
+            def step_fn(params, caches, tok, pos, active, tables):
+                self._trace_count += 1
+                return pstep(cfg, params, caches, tok, pos, active, tables)
+        return step_fn
+
+    # ----------------------------------------------------------------- state
+    @property
+    def occupancy(self) -> float:
+        return self._pool.occupancy if self._started else 0.0
+
+    @property
+    def queue_depth(self) -> int:
+        return self._queues.depth if self._started else 0
+
+    @property
+    def idle(self) -> bool:
+        return (not self._started
+                or (self._pool.n_active == 0 and self._queues.depth == 0))
+
+    @property
+    def load_score(self) -> float:
+        """Router's routing signal: active + queued work per slot."""
+        if not self._started:
+            return 0.0
+        return (self._pool.n_active + self._queues.depth) / self.max_slots
+
+    @property
+    def preemption_count(self) -> int:
+        return self._n_preemptions
+
+    # ----------------------------------------------------------------- setup
+    def start(self, *, telemetry: Telemetry | None = None, controller=None,
+              watcher=None, scheduler=None, online=None,
+              shadow_every: int | None = None,
+              log: Callable[[str], None] | None = None) -> Telemetry:
+        """Bind the control plane and reset all serving state (slots,
+        pages, queues, caches).  Callable directly (the router drives
+        replicas through ``submit``/``step_once``) or via :meth:`serve`."""
+        from .kvcache import PageAllocator
+        from .slots import SlotPool, WeightedFairQueues
+
+        if scheduler is not None:
+            assert self._adaptive, "class-aware serving needs a QoS plan"
+        self.telemetry = telemetry or Telemetry()
+        self._controller, self._watcher = controller, watcher
+        self._scheduler, self._online, self._log = scheduler, online, log
+        if shadow_every is not None:
+            self._shadow_every = max(1, int(shadow_every))
+        elif controller is not None:
+            self._shadow_every = max(1, controller.config.shadow_every)
+        elif scheduler is not None:
+            self._shadow_every = scheduler.shadow_every
+        else:
+            self._shadow_every = 4
+        self._alloc = PageAllocator(self.n_pages, self.page_size)
+        self._caches = self._init_paged_caches(
+            self.cfg, self.max_slots, self.n_pages, self.page_size,
+            self.total)
+        self._pool = SlotPool(self.max_slots)
+        if scheduler is not None:
+            self._queues = WeightedFairQueues(
+                scheduler.book.names, scheduler.book.drain_weights())
+        else:
+            self._queues = WeightedFairQueues(("std",))
+        self._device_stacks: dict[int, object] = {}
+        self._device_ladder = None
+        self._step_idx = 0
+        self._tick = 0
+        self._n_preemptions = 0
+        self.completions: dict[int, np.ndarray] = {}
+        if self._adaptive:
+            self.telemetry.register_plan(self._plan)
+        self._started = True
+        return self.telemetry
+
+    # ------------------------------------------------------------- admission
+    def submit(self, request: Request, now: float | None = None) -> None:
+        """Queue one request.  Join/leave happens per decode step, so this
+        never blocks; admission itself waits for a slot *and* pages."""
+        assert self._started, "call start() before submit()"
+        assert len(request.tokens) <= self.prompt_len, (
+            f"request {request.rid} prompt ({len(request.tokens)}) exceeds "
+            f"engine prompt_len ({self.prompt_len})")
+        from .slots import SeqState
+
+        cls = (self._scheduler.book.route(request.qos_class)
+               if self._scheduler is not None else "std")
+        now = time.perf_counter() if now is None else now
+        self._queues.push(cls, SeqState(
+            rid=request.rid, cls=cls,
+            prompt=np.asarray(request.tokens, np.int32),
+            gen_len=self.gen_len, submitted_t=now))
+
+    def _admissible(self, seq) -> bool:
+        # a preempted request still holds its pages; a fresh one needs the
+        # pool to cover its whole prompt+gen lifetime (out-of-pages blocks
+        # admission up front, it never corrupts a running neighbour)
+        return self._alloc.holds(seq.rid) or self._alloc.can_alloc(
+            seq.n_tokens)
+
+    def _place(self, idx: int, seq, now: float) -> None:
+        if not self._alloc.holds(seq.rid):
+            self._alloc.alloc(seq.rid, seq.n_tokens)
+        if seq.ring_rows is not None:
+            # restore the suspended request's sliding-window ring rows
+            # into its new slot (paged layers need nothing: the page
+            # tables re-point at the same physical pages)
+            for li, rows in seq.ring_rows.items():
+                layer = self._caches[li]
+                self._caches[li] = {
+                    k: layer[k].at[idx].set(jnp.asarray(v))
+                    for k, v in rows.items()}
+            seq.ring_rows = None
+        if seq.pos == 0 and seq.preempted == 0:
+            self.telemetry.record_queue(
+                seq.cls if self._scheduler is not None else None,
+                self._queues.depth, [now - seq.submitted_t])
+        self._pool.place(idx, seq)
+
+    def _preempt_slot(self, idx: int, by_cls: str) -> None:
+        seq = self._pool.evict(idx)
+        rows: dict[int, dict] = {}
+        for li, layer in enumerate(self._caches):
+            if "k" in layer:    # per-slot ring (sliding-window attention)
+                rows[li] = {"k": np.asarray(layer["k"][idx]),
+                            "v": np.asarray(layer["v"][idx])}
+        seq.ring_rows = rows
+        seq.preempted += 1
+        self._n_preemptions += 1
+        self._queues.push_front(seq.cls, seq)
+        self.telemetry.record_preemption(
+            step=self._step_idx, victim_rid=seq.rid, victim_class=seq.cls,
+            by_class=by_cls)
+        trace_event("serve.preempt", step=self._step_idx, rid=seq.rid,
+                    victim=seq.cls, by=by_cls)
+        if self._log:
+            self._log(f"step {self._step_idx}: preempt rid={seq.rid} "
+                      f"({seq.cls}) for {by_cls}")
+
+    def _admit(self, now: float) -> None:
+        # 1) weighted-fair fill of free slots
+        while (idx := self._pool.free_slot()) is not None:
+            picked = self._queues.pick(self._admissible)
+            if picked is None:
+                break
+            _, seq = picked
+            self._place(idx, seq, now)
+        # 2) SLO preemption: a queued request whose class declares a
+        # latency SLO claims a slot from the worst strictly-lower tier
+        if self._scheduler is None:
+            return
+        book = self._scheduler.book
+        for _ in range(self.max_slots):
+            if self._pool.free_slot() is not None:
+                break
+            did = False
+            for c in book:
+                if c.slo_ms is None:
+                    continue
+                head = self._queues.peek(c.name)
+                if head is None or not self._admissible(head):
+                    continue
+                victim = self._pool.pick_victim(
+                    lambda n: book.get(n).priority, c.priority)
+                if victim is None:
+                    continue
+                self._preempt_slot(victim, by_cls=c.name)
+                self._place(victim, self._queues.pop(c.name), now)
+                did = True
+                break
+            if not did:
+                break
+
+    # ------------------------------------------------------------------ step
+    def _resolve_stack(self, active_classes):
+        """The step's LUT stack: with a scheduler, the batch decodes at
+        the level of its *strictest* active class (slots share one step,
+        so the most exacting tenant sets the table for everyone in it —
+        per-class plans separate again at the router's replica level)."""
+        if not self._adaptive:
+            return None, None, None
+        if self._scheduler is None:
+            return None, self._plan, (self._controller.level
+                                      if self._controller else None)
+        sch = self._scheduler
+        glevel = (self._controller.level if self._controller is not None
+                  else sch.top_level)
+        level = min((sch.level_for(c, glevel) for c in active_classes),
+                    default=min(glevel, sch.top_level))
+        if sch.ladder is not self._device_ladder:
+            self._device_stacks.clear()
+            self._device_ladder = sch.ladder
+        luts = self._device_stacks.get(level)
+        if luts is None:
+            raw = sch.ladder.luts(level)
+            luts = (dict((b, jnp.asarray(a)) for b, a in raw.items())
+                    if isinstance(raw, dict) else jnp.asarray(raw))
+            self._device_stacks[level] = luts
+        plan = sch.ladder.plan(level)
+        self.telemetry.register_plan(plan)
+        return luts, plan, glevel
+
+    def step_once(self, now: float | None = None) -> bool:
+        """Admit what fits, then run one decode step over the pool.
+        Returns ``False`` (and runs nothing) when no slot is active."""
+        assert self._started, "call start() before step_once()"
+        now = time.perf_counter() if now is None else now
+        self._admit(now)
+        occupied = list(self._pool)
+        if not occupied:
+            return False
+
+        toks = np.zeros((self.max_slots, 1), np.int32)
+        pos = np.zeros(self.max_slots, np.int32)
+        active = np.zeros(self.max_slots, bool)
+        tables = np.empty((self.max_slots, self.table_entries), np.int32)
+        for i in range(self.max_slots):
+            tables[i] = self._alloc.padded_table(None, self.table_entries)
+        for idx, seq in occupied:
+            toks[idx, 0] = seq.next_token()
+            pos[idx] = seq.pos
+            active[idx] = True
+            tables[idx] = self._alloc.padded_table(seq.rid,
+                                                   self.table_entries)
+
+        classes = sorted({seq.cls for _, seq in occupied})
+        luts, plan_b, glevel = self._resolve_stack(classes)
+        if self._adaptive and luts is None:
+            luts, plan_b = self._luts, self._plan
+
+        jt = (jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(active),
+              jnp.asarray(tables))
+        want_shadow = (self._adaptive
+                       and (self._controller is not None
+                            or self._scheduler is not None)
+                       and self._step_idx % self._shadow_every == 0)
+        shadow_logits = None
+        shadow_s = 0.0
+        if want_shadow:
+            with trace_span("serve.shadow"):
+                ts = time.perf_counter()
+                shadow_caches = jax.tree.map(jnp.copy, self._caches)
+                shadow_logits, _ = self._jit_step(
+                    self.params, shadow_caches, *jt, self._exact_luts)
+                shadow_logits.block_until_ready()
+                shadow_s = time.perf_counter() - ts
+        t0 = time.perf_counter()
+        if self._adaptive:
+            logits, self._caches = self._jit_step(
+                self.params, self._caches, *jt, luts)
+        else:
+            logits, self._caches = self._jit_step(
+                self.params, self._caches, *jt)
+        logits.block_until_ready()
+        step_s = time.perf_counter() - t0
+
+        drift = None
+        if shadow_logits is not None:
+            rows = np.flatnonzero(active)
+            drift = float(jnp.abs(logits[rows]
+                                  - shadow_logits[rows]).mean())
+
+        sampled = np.asarray(jnp.argmax(logits, axis=-1), np.int64)
+        t_done = time.perf_counter()
+        by_class: dict[str, dict] = {}
+        for idx, seq in occupied:
+            row = by_class.setdefault(
+                seq.cls, {"rows": 0, "decode_tokens": 0,
+                          "prefill_tokens": 0})
+            row["rows"] += 1
+            generated, first = seq.advance(int(sampled[idx]))
+            if generated:
+                row["decode_tokens"] += 1
+            else:
+                row["prefill_tokens"] += 1
+            if first:
+                self.telemetry.record_ttft(
+                    seq.cls if self._scheduler is not None else None,
+                    t_done - seq.submitted_t)
+            if seq.done:
+                self._pool.evict(idx)
+                self._alloc.free(seq.rid)
+                gen = np.asarray(seq.generated, np.int32)
+                self.completions[seq.rid] = gen
+                self.last_tokens = gen[None, :]
+                self.telemetry.record_request_done(
+                    seq.cls if self._scheduler is not None else None)
+
+        backlog = self._queues.depth
+        occ = self._pool.occupancy
+        self.telemetry.record_step(
+            step=self._step_idx, tick=self._tick, step_s=step_s,
+            by_class=by_class,
+            decode_tokens=sum(r["decode_tokens"] for r in by_class.values()),
+            prefill_tokens=sum(r["prefill_tokens"]
+                               for r in by_class.values()),
+            plan_id=plan_b.plan_id if self._adaptive else None,
+            drift=drift, backlog=backlog, occupancy=occ)
+
+        self._control_plane(step_s, drift, plan_b, glevel, backlog, occ)
+        self._step_idx += 1
+        return True
+
+    def _control_plane(self, step_s, drift, plan_b, glevel, backlog, occ):
+        controller, scheduler = self._controller, self._scheduler
+        if drift is not None and self._adaptive:
+            if scheduler is not None:
+                for cls in {seq.cls for _, seq in self._pool}:
+                    scheduler.observe(cls, drift)
+            if self._online is not None and plan_b is not None:
+                self._online.update(self._plan_maes(plan_b), drift)
+        if self._watcher is not None and self._adaptive \
+                and self._watcher.poll():
+            try:
+                fr = self._watcher.load_frontier()
+                if self._width_map is not None:
+                    changed = self.refresh_mixed(
+                        fr, controller=controller, scheduler=scheduler,
+                        telemetry=self.telemetry, batch_idx=self._step_idx)
+                else:
+                    compiled, exact_area, _bits = fr
+                    changed = self.refresh_library(
+                        compiled, exact_area, controller=controller,
+                        scheduler=scheduler, telemetry=self.telemetry,
+                        batch_idx=self._step_idx)
+                trace_event("serve.refresh", cause="watcher",
+                            changed=changed, batch=self._step_idx)
+                if changed and self._log:
+                    self._log(f"step {self._step_idx}: library refresh -> "
+                              f"plan {self._plan.plan_id}")
+            except (LookupError, ValueError) as e:
+                trace_event("serve.refresh", cause="watcher", changed=False,
+                            batch=self._step_idx, skipped=str(e))
+                if self._log:
+                    self._log(f"watcher: refresh skipped ({e})")
+        if controller is not None and self._adaptive:
+            # occupancy replaces the fixed loop's whole-queue heuristic:
+            # requests already in slots are being served, only true
+            # admission-queue depth counts as waiting work
+            eff_ms = effective_load_ms(1e3 * step_s, backlog=backlog,
+                                       capacity=self.max_slots,
+                                       occupancy=occ)
+            drift_sig = (drift if scheduler is None
+                         or (glevel is not None
+                             and plan_b is scheduler.ladder.plan(glevel))
+                         else None)
+            level = controller.observe(eff_ms, drift_sig)
+            if level is not None:
+                trace_event("serve.control", level=level,
+                            cause=controller.last_reason,
+                            batch=self._step_idx)
+                if scheduler is None:
+                    moved = self.swap_plan(
+                        controller.plan, controller.luts(),
+                        reason=f"qos-{controller.last_reason}",
+                        telemetry=self.telemetry, batch_idx=self._step_idx)
+                    if moved and self._log:
+                        self._log(f"step {self._step_idx}: controller -> "
+                                  f"level {level} "
+                                  f"({controller.last_reason})")
+                else:
+                    lad = scheduler.ladder
+                    self.telemetry.record_swap(
+                        batch=self._step_idx,
+                        reason=f"qos-{controller.last_reason}",
+                        old=lad.plan(min(glevel, len(lad) - 1)).plan_id,
+                        new=lad.plan(min(level, len(lad) - 1)).plan_id)
+                    if self._log:
+                        self._log(f"step {self._step_idx}: controller -> "
+                                  f"global level {level} "
+                                  f"({controller.last_reason})")
+
+    # ----------------------------------------------------------------- serve
+    def serve(self, profile: LoadProfile, *, controller=None, watcher=None,
+              scheduler=None, online=None,
+              telemetry: Telemetry | None = None, seed: int = 0,
+              steps_per_tick: int | None = None,
+              on_step_end: Callable[["ContinuousServingEngine", int],
+                                    None] | None = None,
+              log: Callable[[str], None] | None = None) -> Telemetry:
+        """Serve a synthetic load profile continuously: each tick's
+        arrivals join the admission queues, then up to ``steps_per_tick``
+        decode steps run before the next tick's arrivals — requests keep
+        joining/leaving the pool mid-generation.  After the last tick the
+        pool drains to empty."""
+        assert profile.prompt_len <= self.prompt_len, (
+            f"profile prompts up to {profile.prompt_len} exceed engine "
+            f"prompt_len {self.prompt_len}")
+        assert profile.gen_len == self.gen_len
+        telemetry = self.start(telemetry=telemetry, controller=controller,
+                               watcher=watcher, scheduler=scheduler,
+                               online=online, log=log)
+        steps = steps_per_tick or self.steps_per_tick
+        per_tick = synth_requests(profile, self.cfg.vocab_size, seed)
+        with trace_span("serve.continuous", slots=self.max_slots,
+                        pages=self.n_pages):
+            for tick in range(profile.n_ticks):
+                self._tick = tick
+                now = time.perf_counter()
+                for r in per_tick[tick]:
+                    self.submit(r, now)
+                for _ in range(steps):
+                    if not self.step_once():
+                        break
+                    if on_step_end is not None:
+                        on_step_end(self, self._step_idx - 1)
+            while self.step_once():
+                if on_step_end is not None:
+                    on_step_end(self, self._step_idx - 1)
         return telemetry

@@ -22,7 +22,8 @@ from dataclasses import dataclass
 import numpy as np
 
 __all__ = ["Request", "LoadProfile", "steady", "ramp", "spike",
-           "make_profile", "synth_requests", "PROFILES"]
+           "make_profile", "synth_requests", "parse_prompt_dist",
+           "PROFILES", "PROMPT_DISTS"]
 
 
 @dataclass(frozen=True)
@@ -43,13 +44,22 @@ class LoadProfile:
     class, drawn from the given ``((name, fraction), ...)`` distribution —
     the fractions should sum to 1 (``repro.sensitivity.classes.parse_class_mix``
     normalizes a CLI spec).  ``None`` keeps the legacy single-tier stream
-    bit-identical (no extra RNG draws happen)."""
+    bit-identical (no extra RNG draws happen).
+
+    ``prompt_dist`` optionally varies per-request prompt lengths inside
+    ``[1, prompt_len]`` — ``("uniform", lo, hi)`` or ``("bimodal", lo,
+    hi)`` (half the requests near ``lo``, half near ``hi``) — which is
+    what makes the paged KV cache earn its keep: with fixed lengths every
+    request needs the same page count and paging is pure overhead.
+    ``prompt_len`` stays the *maximum* (the fixed-batch engine pads to
+    it; the continuous engine sizes page tables by it)."""
 
     name: str
     arrivals: tuple[int, ...]
     prompt_len: int = 16
     gen_len: int = 32
     class_mix: tuple[tuple[str, float], ...] | None = None
+    prompt_dist: tuple | None = None
 
     @property
     def n_ticks(self) -> int:
@@ -61,45 +71,97 @@ class LoadProfile:
 
 
 def steady(ticks: int, per_tick: int, *, prompt_len: int = 16,
-           gen_len: int = 32, class_mix=None) -> LoadProfile:
+           gen_len: int = 32, class_mix=None,
+           prompt_dist=None) -> LoadProfile:
     return LoadProfile("steady", (per_tick,) * ticks, prompt_len, gen_len,
-                       class_mix)
+                       class_mix, prompt_dist)
 
 
 def ramp(ticks: int, peak: int, *, prompt_len: int = 16,
-         gen_len: int = 32, class_mix=None) -> LoadProfile:
+         gen_len: int = 32, class_mix=None, prompt_dist=None) -> LoadProfile:
     """0 -> ``peak`` arrivals, linearly over ``ticks`` ticks."""
     arr = tuple(int(round(peak * (t + 1) / ticks)) for t in range(ticks))
-    return LoadProfile("ramp", arr, prompt_len, gen_len, class_mix)
+    return LoadProfile("ramp", arr, prompt_len, gen_len, class_mix,
+                       prompt_dist)
 
 
 def spike(ticks: int, base: int, peak: int, *, at: int | None = None,
           width: int | None = None, prompt_len: int = 16,
-          gen_len: int = 32, class_mix=None) -> LoadProfile:
+          gen_len: int = 32, class_mix=None,
+          prompt_dist=None) -> LoadProfile:
     """``base`` arrivals with a ``peak`` burst of ``width`` ticks at ``at``."""
     at = ticks // 3 if at is None else at
     width = max(1, ticks // 4) if width is None else width
     arr = tuple(peak if at <= t < at + width else base for t in range(ticks))
-    return LoadProfile("spike", arr, prompt_len, gen_len, class_mix)
+    return LoadProfile("spike", arr, prompt_len, gen_len, class_mix,
+                       prompt_dist)
 
 
 PROFILES = ("steady", "ramp", "spike")
+PROMPT_DISTS = ("uniform", "bimodal")
+
+# prompt-length RNG salt: lengths ride their own stream (like the QoS
+# class salt 0xC1A5) so turning a distribution on never changes which
+# *tokens* a request would have drawn
+_LEN_SALT = 0x1E57
+
+
+def parse_prompt_dist(spec: str, prompt_len: int) -> tuple:
+    """CLI prompt-length spec -> a :class:`LoadProfile.prompt_dist` tuple.
+
+    ``"uniform:4-16"`` draws each request's length uniformly in [4, 16];
+    ``"bimodal:4-16"`` draws half near 4 and half near 16.  Bounds must
+    fit ``[1, prompt_len]`` — the profile's ``prompt_len`` stays the hard
+    maximum every engine sizes against."""
+    try:
+        kind, _, rng = spec.partition(":")
+        lo_s, _, hi_s = rng.partition("-")
+        lo, hi = int(lo_s), int(hi_s)
+    except ValueError:
+        raise ValueError(
+            f"bad prompt-length spec {spec!r}; expected kind:lo-hi, e.g. "
+            f"uniform:4-16 (kinds: {PROMPT_DISTS})") from None
+    if kind not in PROMPT_DISTS:
+        raise ValueError(
+            f"unknown prompt-length distribution {kind!r}; "
+            f"known: {PROMPT_DISTS}")
+    if not 1 <= lo <= hi <= prompt_len:
+        raise ValueError(
+            f"prompt-length bounds {lo}-{hi} must satisfy "
+            f"1 <= lo <= hi <= prompt_len ({prompt_len})")
+    return (kind, lo, hi)
+
+
+def _draw_lengths(dist: tuple, n: int, rng: np.random.Generator
+                  ) -> np.ndarray:
+    kind, lo, hi = dist
+    if kind == "uniform":
+        return rng.integers(lo, hi + 1, size=n)
+    if kind == "bimodal":
+        # two tight modes at the bounds: the short/long request mix that
+        # makes fixed-size per-slot caches (and fixed batches) look worst
+        mode = rng.integers(0, 2, size=n)
+        jitter = rng.integers(0, max(1, (hi - lo) // 4) + 1, size=n)
+        return np.where(mode == 0, np.minimum(lo + jitter, hi),
+                        np.maximum(hi - jitter, lo))
+    raise ValueError(f"unknown prompt-length distribution {kind!r}")
 
 
 def make_profile(kind: str, *, ticks: int, per_tick: int,
                  prompt_len: int = 16, gen_len: int = 32,
-                 class_mix=None) -> LoadProfile:
+                 class_mix=None, prompt_dist=None) -> LoadProfile:
     """CLI helper: one of :data:`PROFILES` at a given scale.  ``per_tick``
     is the steady rate / ramp peak / spike peak (spike base is 1)."""
     if kind == "steady":
         return steady(ticks, per_tick, prompt_len=prompt_len, gen_len=gen_len,
-                      class_mix=class_mix)
+                      class_mix=class_mix, prompt_dist=prompt_dist)
     if kind == "ramp":
         return ramp(ticks, per_tick, prompt_len=prompt_len, gen_len=gen_len,
-                    class_mix=class_mix)
+                    class_mix=class_mix, prompt_dist=prompt_dist)
     if kind == "spike":
         return spike(ticks, 1, per_tick, prompt_len=prompt_len,
-                     gen_len=gen_len, class_mix=class_mix)
+                     gen_len=gen_len, class_mix=class_mix,
+                     prompt_dist=prompt_dist)
     raise ValueError(f"unknown load profile {kind!r}; known: {PROFILES}")
 
 
@@ -113,7 +175,11 @@ def synth_requests(profile: LoadProfile, vocab_size: int,
     tick's arrival count reshuffles only that tick's later prompts).
     With a ``class_mix``, QoS classes come from a *separate* RNG stream
     (seeded per ``(seed, tick)`` with a class salt), so tagging traffic
-    never changes the token stream a profile would synthesize untagged."""
+    never changes the token stream a profile would synthesize untagged.
+    ``prompt_dist`` lengths likewise ride their own salted stream, and a
+    request always draws its full ``prompt_len`` ranks before truncating
+    to the drawn length — request *i*'s tokens are a prefix of what it
+    would have drawn at any other length setting."""
     names = probs = None
     if profile.class_mix:
         names = [n for n, _ in profile.class_mix]
@@ -125,10 +191,16 @@ def synth_requests(profile: LoadProfile, vocab_size: int,
     for tick, n in enumerate(profile.arrivals):
         rng = np.random.default_rng((seed, tick))
         crng = np.random.default_rng((seed, tick, 0xC1A5))
+        lens = None
+        if profile.prompt_dist is not None:
+            lrng = np.random.default_rng((seed, tick, _LEN_SALT))
+            lens = _draw_lengths(profile.prompt_dist, n, lrng)
         reqs = []
-        for _ in range(n):
+        for i in range(n):
             ranks = rng.zipf(1.2, size=profile.prompt_len).astype(np.int64)
             tokens = np.minimum(ranks - 1, vocab_size - 1).astype(np.int32)
+            if lens is not None:
+                tokens = tokens[: int(lens[i])]
             cls = (names[crng.choice(len(names), p=probs)]
                    if names is not None else "std")
             reqs.append(Request(rid=rid, tokens=tokens, arrived_tick=tick,

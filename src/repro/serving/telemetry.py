@@ -27,7 +27,8 @@ from pathlib import Path
 from ..obs.export import write_bench_json
 from ..obs.metrics import LATENCY_MS_BUCKETS, MetricRegistry
 
-__all__ = ["Telemetry", "ALL_CLASSES", "TOK_S_BUCKETS", "DRIFT_BUCKETS"]
+__all__ = ["Telemetry", "ALL_CLASSES", "TOK_S_BUCKETS", "DRIFT_BUCKETS",
+           "TTFT_MS_BUCKETS"]
 
 # the label the whole-run aggregate rides under; per-QoS-class rows appear
 # next to it as classes are actually served (a single-tier serve stays
@@ -38,6 +39,10 @@ TOK_S_BUCKETS = (1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
                  1000.0, 2500.0, 5000.0, 10_000.0, 25_000.0, 100_000.0)
 DRIFT_BUCKETS = (1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 0.01, 0.025, 0.05,
                  0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+# time-to-first-token spans queue wait + prefill, so it runs a couple of
+# decades above per-step latency
+TTFT_MS_BUCKETS = (1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
+                   1000.0, 2500.0, 5000.0, 10_000.0, 30_000.0, 60_000.0)
 
 
 class Telemetry:
@@ -125,6 +130,86 @@ class Telemetry:
             "class": qos_class,
         })
 
+    def record_step(self, *, step: int, tick: int, step_s: float,
+                    by_class: dict, decode_tokens: int, prefill_tokens: int,
+                    plan_id: str | None = None, drift: float | None = None,
+                    backlog: int = 0, occupancy: float = 0.0) -> None:
+        """One continuous-batching decode step.  ``by_class`` maps each
+        QoS class with active rows to ``{"rows", "decode_tokens",
+        "prefill_tokens"}``.  The full step time is attributed to *every*
+        active class (it is the latency each one experienced) and to
+        decode time in the aggregate — pessimistic for continuous mode,
+        since prefill rows ride inside the same step, but that bias runs
+        *against* the mode so a measured win is real."""
+        step_ms = 1e3 * step_s
+        self._count("serve_steps_total", None, 1)
+        self._count("serve_decode_steps_total", None, 1)
+        self._count("serve_decode_s_total", None, step_s)
+        self._count("serve_decode_tokens_total", None, decode_tokens)
+        self._count("serve_prefill_tokens_total", None, prefill_tokens)
+        self._observe("serve_ms_per_step", None, step_ms, LATENCY_MS_BUCKETS)
+        if decode_tokens and step_s > 0:
+            self._observe("serve_decode_tok_s", None,
+                          decode_tokens / step_s, TOK_S_BUCKETS)
+        if drift is not None:
+            self._observe("serve_drift", None, float(drift), DRIFT_BUCKETS)
+        for cls, row in by_class.items():
+            # class-label counters only — the ``_all`` aggregate was
+            # counted once above; ``_count`` here would double it
+            def inc(name: str, v: float) -> None:
+                self.registry.counter(name, **{"class": cls}).inc(v)
+
+            inc("serve_steps_total", 1)
+            inc("serve_decode_steps_total", 1)
+            inc("serve_decode_s_total", step_s)
+            inc("serve_decode_tokens_total", row.get("decode_tokens", 0))
+            inc("serve_prefill_tokens_total", row.get("prefill_tokens", 0))
+            self.registry.histogram("serve_ms_per_step",
+                                    buckets=LATENCY_MS_BUCKETS,
+                                    **{"class": cls}).observe(step_ms)
+            if drift is not None:
+                self.registry.histogram("serve_drift",
+                                        buckets=DRIFT_BUCKETS,
+                                        **{"class": cls}).observe(float(drift))
+        self.registry.gauge("serve_slot_occupancy",
+                            **{"class": ALL_CLASSES}).set(occupancy)
+        self.events.append({
+            "step": step,
+            "tick": tick,
+            "step_ms": round(step_ms, 3),
+            "active": {c: r.get("rows", 0) for c, r in by_class.items()},
+            "decode_tokens": decode_tokens,
+            "prefill_tokens": prefill_tokens,
+            "plan": plan_id,
+            "drift": None if drift is None else round(float(drift), 6),
+            "backlog": backlog,
+            "occupancy": round(occupancy, 3),
+        })
+
+    def record_ttft(self, qos_class: str | None, ttft_s: float) -> None:
+        """Time-to-first-token for one request: admission (entering the
+        engine's queue) to the step that produced its first generated
+        token — queue wait, any preemption-induced suspension, and
+        prefill all included.  The SLO users actually feel."""
+        self._observe("serve_ttft_ms", qos_class, 1e3 * float(ttft_s),
+                      TTFT_MS_BUCKETS)
+
+    def record_request_done(self, qos_class: str | None) -> None:
+        """One request fully decoded (the continuous engine's analog of
+        ``record_batch``'s per-batch request count)."""
+        self._count("serve_requests_total", qos_class, 1)
+
+    def record_preemption(self, *, step: int, victim_rid: int,
+                          victim_class: str | None,
+                          by_class: str | None) -> None:
+        """A running slot was preempted (its request keeps its pages and
+        resumes later).  Counted against the *victim's* class."""
+        self._count("serve_preemptions_total", victim_class, 1)
+        self.events.append({
+            "step": step, "preempted_rid": victim_rid,
+            "victim_class": victim_class, "by_class": by_class,
+        })
+
     def record_swap(self, *, batch: int, reason: str, old: str | None,
                     new: str | None) -> None:
         self.registry.counter("serve_swaps_total", reason=reason).inc()
@@ -154,10 +239,18 @@ class Telemetry:
     def swap_count(self) -> int:
         return len(self.swaps)
 
+    @property
+    def preemptions(self) -> int:
+        return int(self._counter_value("serve_preemptions_total"))
+
     def _class_names(self) -> list[str]:
+        # union of both recording paths: fixed-batch serves label
+        # serve_batches_total, continuous serves label serve_ms_per_step
+        # per step — a class served either way gets its summary row
         return sorted({labels["class"]
-                       for labels, _ in
-                       self.registry.with_name("serve_batches_total")
+                       for name in ("serve_batches_total",
+                                    "serve_ms_per_step")
+                       for labels, _ in self.registry.with_name(name)
                        if labels["class"] != ALL_CLASSES})
 
     def _class_row(self, cls: str) -> dict:
@@ -182,6 +275,13 @@ class Telemetry:
         if lat is not None and lat.count:
             for p, v in lat.percentiles().items():
                 row[f"{p}_ms_per_step"] = round(v, 3)
+        ttft = self.registry.find("serve_ttft_ms", **{"class": cls})
+        if ttft is not None and ttft.count:
+            for p, v in ttft.percentiles().items():
+                row[f"{p}_ttft_ms"] = round(v, 3)
+        pre = self._counter_value("serve_preemptions_total", cls)
+        if pre:
+            row["preemptions"] = int(pre)
         return row
 
     def summary(self) -> dict:
@@ -216,6 +316,24 @@ class Telemetry:
         if lat is not None and lat.count:
             out["latency_ms_per_step"] = {
                 p: round(v, 3) for p, v in lat.percentiles().items()}
+        tok = self.registry.find("serve_decode_tok_s",
+                                 **{"class": ALL_CLASSES})
+        if tok is not None and tok.count:
+            # per-observation throughput percentiles: the totals-based
+            # decode_tok_s above folds the one-off trace/compile step into
+            # the rate; the median does not, so paired engine comparisons
+            # read steady-state throughput here
+            out["decode_tok_s_pct"] = {
+                p: round(v, 2) for p, v in tok.percentiles().items()}
+        steps = self._counter_value("serve_steps_total")
+        if steps:
+            out["steps"] = int(steps)
+        if self.preemptions:
+            out["preemptions"] = self.preemptions
+        ttft = self.registry.find("serve_ttft_ms", **{"class": ALL_CLASSES})
+        if ttft is not None and ttft.count:
+            out["ttft_ms"] = {
+                p: round(v, 3) for p, v in ttft.percentiles().items()}
         classes = {cls: self._class_row(cls) for cls in self._class_names()}
         if classes:
             out["classes"] = classes
