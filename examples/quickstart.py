@@ -134,7 +134,46 @@ emits ``serve.batch`` > ``serve.prefill``/``serve.decode``/``serve.shadow``
 spans and per-class latency histograms, so the summary (and the bench
 JSON's class rows) state p50/p95/p99 ms-per-step per traffic tier.  The
 inspector gates CI: ``--require-span fleet.job --require-class-latency``
-exits non-zero when the trace is missing either.
+exits non-zero when the trace is missing either.  ``python -m repro.obs
+summary --json`` emits the same report as machine-readable JSON.
+
+Health & post-mortems
+---------------------
+``--health`` runs the SLO health plane (:mod:`repro.obs.health`) inside
+the serve loop.  Every class that declares ``@ms`` on its spec gets a
+multi-window burn-rate monitor over its live latency histogram (classes
+with finite drift budgets get a drift monitor too): the short window
+catches fast burns, the long window stops flapping, and the combined
+state escalates ok -> warn -> page immediately but de-escalates only
+after consecutive calm evaluations.  Alongside the monitors, streaming
+anomaly detectors (EWMA smoothing scored by median/MAD robust z) watch
+ms-per-step, shadow drift, preemption rate, and queue depth; a fired
+anomaly is attributed to the nearest preceding control event — the
+``serve.swap``/``serve.refresh``/``serve.control`` that most plausibly
+caused it, by event id.  ``--postmortem-dir DIR`` (implies ``--health``)
+adds the flight recorder: a bounded ring of recent steps, control
+events, anomalies, and SLO transitions that dumps an atomic post-mortem
+bundle on SLO breach, fired anomaly, or crash:
+
+    python -m repro.launch.serve --reduced --continuous --library runs/lib \
+        --profile runs/lib/_profiles/gemma3-1b.json \
+        --qos-class "gold:0.02@8ms,batch:0.5" --health \
+        --postmortem-dir runs/postmortems --bench-json BENCH_slo.json
+    python -m repro.obs health --bench BENCH_slo.json   # exit 1 past warn
+    python -m repro.obs postmortem --dir runs/postmortems
+
+``repro.obs health`` gates CI on the bench JSON's ``health`` block
+(``--max-state page`` to tolerate paging in a chaos drill); ``repro.obs
+postmortem`` lists bundles (``--require N`` gates on their count, the
+newest bundle prints its reason, cause, and last frames).  The bench
+regression sentinel closes the loop against history: ``python -m
+repro.obs diff --bench BENCH_*.json --baseline-dir benchmarks/baselines
+--history-dir runs/bench-history`` compares every metric row against
+the committed baseline with direction-aware tolerances
+(``tolerances.json`` next to the baselines; throughput may only drop so
+far, ms/step and drift may only rise so far, ``trace_count`` is exact)
+and exits non-zero on regression, recording every run into the history
+dir for trend plots.
 """
 
 import numpy as np

@@ -30,7 +30,7 @@ from ..obs.metrics import get_registry
 from ..obs.trace import configure as configure_tracing
 from ..obs.trace import read_trace
 from .plan import SWEEPS, load_spec, plan_jobs
-from .worker import RECEIPT_DIR, run_sweep
+from .worker import RECEIPT_DIR, flag_outlier_jobs, run_sweep
 
 
 def notify_store_update(store: OperatorStore, *, sweep: str,
@@ -142,6 +142,10 @@ def main(argv: list[str] | None = None) -> int:
           f"{added} operator(s) added under "
           f"{sum(1 for s in after if after[s][0] > before.get(s, (0, 0))[0])} "
           f"signature(s)")
+    outliers = flag_outlier_jobs(results)
+    for r, z in outliers:
+        print(f"  OUTLIER {r.job.describe():58s} engine_s={r.engine_s:.2f} "
+              f"(robust z={z:+.1f} among its signature's jobs)")
     if trace_dir is not None:
         # the parent's own registry (tensor jobs run in-process) joins the
         # workers' snapshots before the report reads the merged dir back

@@ -33,7 +33,8 @@ from ..obs.metrics import get_registry
 from ..obs.trace import current_tracer
 from ..obs.trace import span as trace_span
 
-__all__ = ["JobResult", "run_job", "run_sweep", "RECEIPT_DIR"]
+__all__ = ["JobResult", "run_job", "run_sweep", "flag_outlier_jobs",
+           "RECEIPT_DIR"]
 
 RECEIPT_DIR = "_fleet"   # skipped by OperatorStore.signatures() (not a signature)
 
@@ -46,6 +47,7 @@ class JobResult:
     status: str               # "ok" | "skipped" | "failed"
     n_results: int = 0
     wall_s: float = 0.0
+    engine_s: float = 0.0     # pure engine time (no receipt/commit IO)
     error: str | None = None
     stats: dict = field(default_factory=dict)   # engine stats (ok jobs)
 
@@ -150,7 +152,45 @@ def run_job(job: SearchJob, library_root: str | os.PathLike,
     })
     _flush_worker_obs()
     return JobResult(job, "ok", n_results=len(outcome.results),
-                     wall_s=time.time() - t0, stats=dict(outcome.stats))
+                     wall_s=time.time() - t0, engine_s=engine_s,
+                     stats=dict(outcome.stats))
+
+
+def flag_outlier_jobs(results: list[JobResult], *, threshold: float = 4.0,
+                      min_group: int = 4) -> list[tuple[JobResult, float]]:
+    """Flag jobs whose engine wall-time is a robust-z outlier among the
+    ``ok`` jobs sharing their (engine, signature) group — the fleet-side
+    consumer of the health plane's detector math.  A straggling SMT
+    solve or a pathological anneal seed shows up here instead of hiding
+    in the sweep's total.  Groups smaller than ``min_group`` are skipped
+    (median/MAD over 2–3 samples flags noise, not outliers).  Flagged
+    jobs are counted (``fleet_job_outliers_total{engine}``) and traced
+    (``fleet.outlier``), and returned with their z-scores."""
+    from ..obs.anomaly import robust_zscores
+    from ..obs.trace import event as trace_event
+
+    groups: dict[tuple, list[JobResult]] = {}
+    for r in results:
+        if r.status != "ok" or r.engine_s <= 0:
+            continue
+        key = (r.job.engine, r.job.benchmark, r.job.bits,
+               r.job.error_metric, r.job.et)
+        groups.setdefault(key, []).append(r)
+    reg = get_registry()
+    flagged: list[tuple[JobResult, float]] = []
+    for rs in groups.values():
+        if len(rs) < min_group:
+            continue
+        for r, z in zip(rs, robust_zscores([x.engine_s for x in rs])):
+            if abs(z) < threshold:
+                continue
+            flagged.append((r, z))
+            reg.counter("fleet_job_outliers_total",
+                        engine=r.job.engine).inc()
+            trace_event("fleet.outlier", key=r.job.key(),
+                        engine=r.job.engine,
+                        engine_s=round(r.engine_s, 4), zscore=round(z, 2))
+    return flagged
 
 
 def run_sweep(spec, library_root: str | os.PathLike, *,

@@ -64,6 +64,7 @@ from .. import parallel
 from ..configs import ARCH_IDS, get_config
 from ..models import init_model
 from ..obs.export import dump_metrics, write_bench_json
+from ..obs.health import HealthPlane, state_rank
 from ..obs.metrics import MetricRegistry, get_registry
 from ..obs.trace import configure as configure_tracing
 from ..serving import (
@@ -229,8 +230,22 @@ def main() -> None:
                          "spans + a metric snapshot land there; point it at "
                          "a fleet run's trace dir for one merged view "
                          "(python -m repro.obs summary --trace DIR)")
+    ap.add_argument("--health", action="store_true",
+                    help="run the SLO health plane: multi-window burn-rate "
+                         "monitors over the declared --qos-class SLOs and "
+                         "drift budgets, streaming anomaly detectors "
+                         "attributed to swap/refresh/control events, and a "
+                         "flight recorder; the state lands in the bench "
+                         "summary for python -m repro.obs health")
+    ap.add_argument("--postmortem-dir", default=None, metavar="DIR",
+                    help="dump atomic post-mortem bundles (flight-recorder "
+                         "ring + health state) here on SLO breach, fired "
+                         "anomaly, or crash; implies --health "
+                         "(python -m repro.obs postmortem --dir DIR)")
     args = ap.parse_args()
 
+    if args.postmortem_dir:
+        args.health = True
     if args.trace:
         configure_tracing(args.trace)
 
@@ -434,6 +449,14 @@ def main() -> None:
                 else OnlineSensitivity(cfg.n_layers))
         return c, sc, on
 
+    def make_health(tag):
+        """One HealthPlane per engine (states and burn windows are
+        per-engine, exactly like the QoS control plane)."""
+        if not args.health:
+            return None
+        return HealthPlane(book, postmortem_dir=args.postmortem_dir,
+                           tag=tag)
+
     mesh = make_smoke_mesh()
     key = jax.random.PRNGKey(args.seed)
     profile = make_profile(args.schedule, ticks=args.ticks,
@@ -465,6 +488,7 @@ def main() -> None:
         )
         router = None
         fixed_row = None
+        health = None
         if args.continuous:
             max_slots = args.max_slots or args.batch
 
@@ -503,7 +527,8 @@ def main() -> None:
                                 if j % args.replicas == i)
                     replicas.append(Replica(
                         f"replica{i}", make_engine(), controller=c,
-                        scheduler=sc, online=on, classes=aff))
+                        scheduler=sc, online=on, classes=aff,
+                        health=make_health(f"replica{i}")))
                 router = ReplicaRouter(replicas, watcher=watcher)
                 t0 = time.time()
                 s = router.serve(profile, seed=args.seed,
@@ -514,22 +539,26 @@ def main() -> None:
                 telemetry = replicas[0].telemetry
             else:
                 engine = make_engine()
+                health = make_health("serve")
                 t0 = time.time()
                 telemetry = engine.serve(
                     profile, controller=controller, watcher=watcher,
                     scheduler=scheduler, online=online,
                     telemetry=Telemetry(), seed=args.seed,
-                    steps_per_tick=args.steps_per_tick, log=print)
+                    steps_per_tick=args.steps_per_tick, health=health,
+                    log=print)
                 wall = time.time() - t0
         else:
             engine = ServingEngine(
                 cfg, params, batch=args.batch, prompt_len=args.prompt_len,
                 gen_len=args.gen_len, warmup_caches=warmup, **common)
+            health = make_health("serve")
             t0 = time.time()
             telemetry = engine.serve(profile, controller=controller,
                                      watcher=watcher, scheduler=scheduler,
                                      online=online, telemetry=Telemetry(),
-                                     seed=args.seed, log=print)
+                                     seed=args.seed, health=health,
+                                     log=print)
             wall = time.time() - t0
 
     if router is not None:
@@ -651,6 +680,37 @@ def main() -> None:
     if online is not None and online.n_updates:
         s["online_sensitivity"] = np.round(
             online.sensitivities(), 6).tolist()
+    if args.health:
+        # the gateable health doc: single engines report their own plane,
+        # a router reports its worst replica (per-replica reports already
+        # sit in s["replicas"][name]["health"])
+        if router is not None:
+            reports = {r.name: r.health.report() for r in router.replicas}
+            worst = max(reports, key=lambda n: state_rank(
+                reports[n]["state"]))
+            hr = dict(reports[worst], replica=worst)
+        else:
+            hr = health.report()
+        s["health"] = hr
+        print(f"  health : {hr['state']} "
+              f"({hr['anomalies_fired']} anomaly(ies), "
+              f"{hr['pages']} page transition(s), "
+              f"{hr['dumps']} post-mortem(s))"
+              + (f" [worst replica: {worst}]" if router is not None
+                 else ""))
+        for a in hr.get("recent_anomalies", [])[-3:]:
+            cause = a.get("cause")
+            print(f"    anomaly {a['signal']}@{a['step']} "
+                  f"{a['direction']} z={a['zscore']:+.1f}"
+                  + (f" <- {cause['event']}@{cause['step']}"
+                     + (f" [{cause['event_id']}]" if cause["event_id"]
+                        else "")
+                     if cause else " (no recent control event)"))
+        if args.postmortem_dir and hr["dumps"]:
+            print(f"post-mortems -> {args.postmortem_dir} "
+                  f"({hr['dumps']} bundle(s); "
+                  f"python -m repro.obs postmortem --dir "
+                  f"{args.postmortem_dir})")
     if args.trace:
         # the serve-side metric snapshot joins any fleet-side ones already
         # in the dir: per-batch latency/throughput histograms (telemetry's

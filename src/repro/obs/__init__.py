@@ -11,8 +11,17 @@ channels (event rings, end-of-run prints, hand-built bench dicts):
   per-process JSONL, deterministic ids, injectable clock, merged at read
   time.
 * :mod:`repro.obs.export` — Prometheus text + atomic bench-JSON views.
+* :mod:`repro.obs.health` / :mod:`repro.obs.anomaly` /
+  :mod:`repro.obs.flight` — the SLO health plane: multi-window burn-rate
+  monitors with ok/warn/page hysteresis, streaming EWMA+MAD anomaly
+  detectors attributed to control-plane events, and a flight recorder
+  that dumps atomic post-mortem bundles on breach/anomaly/crash.
+* :mod:`repro.obs.regress` — bench regression sentinel: BENCH_*.json vs
+  committed baselines under direction-aware per-metric tolerances.
 * ``python -m repro.obs`` — summarize/filter a trace dir (slowest spans,
-  per-engine fleet wall-time, per-class latency tables).
+  per-engine fleet wall-time, per-class latency tables), gate on health
+  (``health``), read post-mortems (``postmortem``), diff benches
+  (``diff``).
 
 Stdlib-only: importable before jax, numpy or z3 enter the process.
 """
@@ -41,6 +50,23 @@ from .export import (
     read_metrics,
     write_bench_json,
 )
+from .anomaly import (
+    Anomaly,
+    AnomalyPlane,
+    ControlEvent,
+    EventLog,
+    RobustDetector,
+    robust_zscores,
+)
+from .health import (
+    BurnRate,
+    HealthPlane,
+    SLOMonitor,
+    state_penalty,
+    state_rank,
+)
+from .flight import FlightRecorder, read_postmortems
+from .regress import Rule, compare_bench, flatten, load_rules
 
 __all__ = [
     "Counter",
@@ -61,4 +87,21 @@ __all__ = [
     "prometheus_text",
     "read_metrics",
     "write_bench_json",
+    "Anomaly",
+    "AnomalyPlane",
+    "ControlEvent",
+    "EventLog",
+    "RobustDetector",
+    "robust_zscores",
+    "BurnRate",
+    "HealthPlane",
+    "SLOMonitor",
+    "state_penalty",
+    "state_rank",
+    "FlightRecorder",
+    "read_postmortems",
+    "Rule",
+    "compare_bench",
+    "flatten",
+    "load_rules",
 ]

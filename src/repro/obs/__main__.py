@@ -1,22 +1,37 @@
-"""``python -m repro.obs [summary|slowest|prom] --trace <dir>`` — inspect
-a merged trace directory.
+"""``python -m repro.obs <command>`` — inspect traces, gate health,
+read post-mortems, and diff bench runs.
 
-``summary`` prints span totals by name, the slowest spans, per-engine
-fleet job wall-time, and the per-class decode-latency table (p50/p95/p99
-ms/step) from the merged metric snapshots.  ``--require-span`` /
-``--require-class-latency`` turn the summary into a CI gate (non-zero
-exit when the trace is missing the asserted signals).  ``prom`` dumps the
-merged metrics in Prometheus text format.
+* ``summary --trace <dir>`` — span totals, slowest spans, per-engine
+  fleet wall-time, per-class decode-latency table; ``--json`` emits the
+  same facts machine-readably so CI gates parse fields instead of
+  grepping formatted text.  ``--require-span`` /
+  ``--require-class-latency`` turn it into a CI gate.
+* ``slowest --trace <dir>`` / ``prom --trace <dir>`` — the slowest spans
+  / merged metrics in Prometheus text format.
+* ``health --bench BENCH.json [--max-state warn]`` — read the health
+  section a ``--health`` serve wrote; exit 1 when the run's worst SLO
+  state exceeds the allowed one (the CI health gate).
+* ``postmortem --dir <dir>`` — list (or ``--json``-dump) the flight
+  recorder's bundles; ``--require N`` gates on at least N bundles,
+  ``--last`` prints the newest bundle whole.
+* ``diff --bench BENCH.json ... --baseline-dir benchmarks/baselines`` —
+  the bench regression sentinel: direction-aware per-metric comparison
+  against committed baselines, optional ``--history-dir`` accumulation,
+  exit 1 on any regression.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
 from .export import METRICS_GLOB, prometheus_text, read_metrics
+from .flight import read_postmortems
+from .health import STATES, state_rank
 from .metrics import Histogram, MetricRegistry
+from .regress import compare_bench, load_rules, record_history
 from .trace import read_trace
 
 # the metric families the serving telemetry records (kept in one place so
@@ -24,6 +39,8 @@ from .trace import read_trace
 MS_PER_STEP_METRIC = "serve_ms_per_step"
 DECODE_TOK_S_METRIC = "serve_decode_tok_s"
 ALL_CLASSES = "_all"   # the label the whole-run aggregate rides under
+
+COMMANDS = ("summary", "slowest", "prom", "health", "postmortem", "diff")
 
 
 def _fmt(v, width: int = 9, prec: int = 3) -> str:
@@ -126,54 +143,52 @@ def summarize(trace_dir: Path, *, limit: int = 5, out=print) -> dict:
     return {"spans": spans, "engines": engines, "classes": classes}
 
 
-def main(argv: list[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(
-        prog="python -m repro.obs",
-        description="Summarize/filter an observability trace directory.",
-    )
-    ap.add_argument("command", nargs="?", default="summary",
-                    choices=("summary", "slowest", "prom"),
-                    help="summary (default): totals + slowest + engines + "
-                         "per-class latency; slowest: just the slowest "
-                         "spans; prom: merged metrics as Prometheus text")
-    ap.add_argument("--trace", required=True,
-                    help="trace directory (spans-*.jsonl + metrics-*.json)")
-    ap.add_argument("--limit", type=int, default=5,
-                    help="how many slowest spans to show")
-    ap.add_argument("--name", default=None,
-                    help="filter spans to names containing this substring")
-    ap.add_argument("--require-span", action="append", default=[],
-                    metavar="NAME[=N]",
-                    help="exit 1 unless >= N (default 1) spans named NAME "
-                         "are present (CI gate; repeatable)")
-    ap.add_argument("--require-class-latency", action="store_true",
-                    help="exit 1 unless at least one per-class (non-"
-                         f"{ALL_CLASSES!r}) latency histogram is present")
-    args = ap.parse_args(argv)
+def summary_doc(trace_dir: Path, *, limit: int = 5) -> dict:
+    """The ``summary --json`` document: the same facts the human summary
+    prints, as structured fields CI can parse without grepping."""
+    spans = read_trace(trace_dir)
+    return {
+        "trace_dir": str(trace_dir),
+        "n_spans": len(spans),
+        "n_span_files": len(list(trace_dir.glob("spans-*.jsonl"))),
+        "n_metric_snapshots": len(list(trace_dir.glob(METRICS_GLOB))),
+        "span_totals": {
+            name: {"count": count, "total_s": round(total, 6)}
+            for name, count, total in span_totals(spans)},
+        "slowest": [
+            {"name": s["name"], "dur_s": round(float(s.get("dur_s", 0)), 6),
+             "id": s.get("id"), "attrs": s.get("attrs", {})}
+            for s in slowest_spans(spans, limit)],
+        "engines": engine_totals(spans),
+        "classes": {
+            cls: {k: (round(v, 6) if isinstance(v, float) else v)
+                  for k, v in row.items()}
+            for cls, row in class_latency_rows(
+                read_metrics(trace_dir)).items()},
+    }
 
+
+# ---------------------------------------------------------------------------
+# subcommands
+# ---------------------------------------------------------------------------
+def cmd_summary(args) -> int:
     trace_dir = Path(args.trace)
     if not trace_dir.is_dir():
         print(f"no such trace dir: {trace_dir}", file=sys.stderr)
         return 2
-
-    if args.command == "prom":
-        sys.stdout.write(prometheus_text(read_metrics(trace_dir)))
-        return 0
-
-    if args.command == "slowest":
-        spans = read_trace(trace_dir)
-        if args.name:
-            spans = [s for s in spans if args.name in s["name"]]
-        for s in slowest_spans(spans, args.limit):
-            print(f"{_fmt(float(s.get('dur_s', 0.0)))}s  {_describe_span(s)}")
-        return 0
-
-    report = summarize(trace_dir, limit=args.limit)
+    if args.json:
+        doc = summary_doc(trace_dir, limit=args.limit)
+        print(json.dumps(doc, indent=1, sort_keys=True))
+        by_name = {n: r["count"] for n, r in doc["span_totals"].items()}
+        classes = doc["classes"]
+    else:
+        report = summarize(trace_dir, limit=args.limit)
+        by_name = {}
+        for s in report["spans"]:
+            by_name[s["name"]] = by_name.get(s["name"], 0) + 1
+        classes = report["classes"]
 
     rc = 0
-    by_name: dict[str, int] = {}
-    for s in report["spans"]:
-        by_name[s["name"]] = by_name.get(s["name"], 0) + 1
     for req in args.require_span:
         name, _, n = req.partition("=")
         want = int(n) if n else 1
@@ -183,14 +198,238 @@ def main(argv: list[str] | None = None) -> int:
                   file=sys.stderr)
             rc = 1
     if args.require_class_latency:
-        per_class = [c for c in report["classes"] if c != ALL_CLASSES]
+        per_class = [c for c in classes if c != ALL_CLASSES]
         if not per_class:
             print("FAIL: no per-class latency histograms in trace metrics",
                   file=sys.stderr)
             rc = 1
-        else:
+        elif not args.json:
             print(f"\nper-class latency present for: {sorted(per_class)}")
     return rc
+
+
+def cmd_slowest(args) -> int:
+    trace_dir = Path(args.trace)
+    if not trace_dir.is_dir():
+        print(f"no such trace dir: {trace_dir}", file=sys.stderr)
+        return 2
+    spans = read_trace(trace_dir)
+    if args.name:
+        spans = [s for s in spans if args.name in s["name"]]
+    for s in slowest_spans(spans, args.limit):
+        print(f"{_fmt(float(s.get('dur_s', 0.0)))}s  {_describe_span(s)}")
+    return 0
+
+
+def cmd_prom(args) -> int:
+    trace_dir = Path(args.trace)
+    if not trace_dir.is_dir():
+        print(f"no such trace dir: {trace_dir}", file=sys.stderr)
+        return 2
+    sys.stdout.write(prometheus_text(read_metrics(trace_dir)))
+    return 0
+
+
+def cmd_health(args) -> int:
+    """Gate on the health section of a ``--health`` serve's bench JSON
+    (or a bare health-report JSON): exit 1 when the worst observed SLO
+    state exceeds ``--max-state``."""
+    path = Path(args.bench)
+    if not path.exists():
+        print(f"no such bench json: {path}", file=sys.stderr)
+        return 2
+    doc = json.loads(path.read_text())
+    health = doc.get("health", doc)
+    state = health.get("state")
+    if state not in STATES:
+        print(f"{path} has no health section (serve without --health?)",
+              file=sys.stderr)
+        return 2
+    if args.json:
+        print(json.dumps(health, indent=1, sort_keys=True))
+    else:
+        print(f"health: {state}  (anomalies={health.get('anomalies_fired', 0)}"
+              f" pages={health.get('pages', 0)}"
+              f" dumps={health.get('dumps', 0)})")
+        for cls, row in sorted(health.get("classes", {}).items()):
+            parts = [f"{cls}: {row.get('state')}"]
+            for kind in ("latency", "drift"):
+                if kind in row:
+                    b = row[kind]
+                    parts.append(
+                        f"{kind} burn {b.get('burn_short', 0):.2f}/"
+                        f"{b.get('burn_long', 0):.2f} "
+                        f"({b.get('violations', 0)}/"
+                        f"{b.get('observations', 0)} bad)")
+            print("  " + "  ".join(parts))
+        for a in health.get("recent_anomalies", []):
+            cause = a.get("cause")
+            print(f"  anomaly {a['signal']}@{a['step']} z={a['zscore']:+.1f}"
+                  + (f" <- {cause['event']}@{cause['step']}"
+                     f" [{cause.get('event_id', '')}]" if cause else ""))
+    if state_rank(state) > state_rank(args.max_state):
+        print(f"FAIL: health state {state!r} exceeds allowed "
+              f"{args.max_state!r}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def cmd_postmortem(args) -> int:
+    d = Path(args.dir)
+    bundles = read_postmortems(d) if d.is_dir() else []
+    if args.json:
+        print(json.dumps([{"path": str(p), **doc} for p, doc in bundles],
+                         indent=1, sort_keys=True))
+    else:
+        print(f"{len(bundles)} post-mortem bundle(s) in {d}")
+        for p, doc in bundles:
+            ctx = doc.get("context", {})
+            print(f"  {p.name}: {doc.get('reason')} — "
+                  f"{doc.get('detail', '')[:100]} "
+                  f"[{len(doc.get('frames', []))} frame(s), "
+                  f"plan={ctx.get('plan_id')}, step={ctx.get('step')}]")
+        if args.last and bundles:
+            print(json.dumps(bundles[-1][1], indent=1, sort_keys=True))
+    if len(bundles) < args.require:
+        print(f"FAIL: {len(bundles)} bundle(s), need >= {args.require}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def cmd_diff(args) -> int:
+    """Bench regression sentinel: each BENCH json vs its committed
+    baseline (same filename under ``--baseline-dir``)."""
+    rules = load_rules(args.tolerances)
+    rc = 0
+    report = []
+    for bench in args.bench:
+        bench = Path(bench)
+        if not bench.exists():
+            print(f"SKIP {bench.name}: no such file", file=sys.stderr)
+            if args.require_baseline:
+                rc = 1
+            continue
+        current = json.loads(bench.read_text())
+        if args.history_dir:
+            record_history(args.history_dir, bench.name, current)
+        base_path = Path(args.baseline_dir) / bench.name
+        if not base_path.exists():
+            print(f"SKIP {bench.name}: no baseline at {base_path}"
+                  + ("" if args.require_baseline
+                     else " (commit one to enable the gate)"))
+            if args.require_baseline:
+                rc = 1
+            continue
+        res = compare_bench(current, json.loads(base_path.read_text()),
+                            rules)
+        report.append({"bench": bench.name, **res})
+        status = "FAIL" if res["regressions"] else "ok"
+        if res["regressions"]:
+            rc = 1
+        if not args.json:
+            print(f"{status} {bench.name}: {res['compared']} metric(s) "
+                  f"compared, {len(res['regressions'])} regression(s), "
+                  f"{len(res['improvements'])} improvement(s)")
+            for f in res["regressions"]:
+                print(f"  REGRESSION {f['metric']}: "
+                      f"{f['baseline']} -> {f['current']} "
+                      f"(rule {f['rule']}, {f['kind']})")
+            for f in res["improvements"]:
+                print(f"  improved   {f['metric']}: "
+                      f"{f['baseline']} -> {f['current']}")
+    if args.json:
+        print(json.dumps(report, indent=1, sort_keys=True))
+    return rc
+
+
+# ---------------------------------------------------------------------------
+def main(argv: list[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # historical form: `python -m repro.obs --trace d` (command omitted)
+    if not argv or argv[0] not in COMMANDS and argv[0] not in ("-h",
+                                                               "--help"):
+        argv.insert(0, "summary")
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Inspect traces, gate health, read post-mortems, "
+                    "diff bench runs.",
+    )
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    def trace_args(p):
+        p.add_argument("--trace", required=True,
+                       help="trace directory (spans-*.jsonl + "
+                            "metrics-*.json)")
+        p.add_argument("--limit", type=int, default=5,
+                       help="how many slowest spans to show")
+
+    p = sub.add_parser("summary", help="totals + slowest + engines + "
+                                       "per-class latency")
+    trace_args(p)
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable summary document")
+    p.add_argument("--require-span", action="append", default=[],
+                   metavar="NAME[=N]",
+                   help="exit 1 unless >= N (default 1) spans named NAME "
+                        "are present (CI gate; repeatable)")
+    p.add_argument("--require-class-latency", action="store_true",
+                   help="exit 1 unless at least one per-class (non-"
+                        f"{ALL_CLASSES!r}) latency histogram is present")
+    p.set_defaults(fn=cmd_summary)
+
+    p = sub.add_parser("slowest", help="just the slowest spans")
+    trace_args(p)
+    p.add_argument("--name", default=None,
+                   help="filter spans to names containing this substring")
+    p.set_defaults(fn=cmd_slowest)
+
+    p = sub.add_parser("prom", help="merged metrics as Prometheus text")
+    trace_args(p)
+    p.set_defaults(fn=cmd_prom)
+
+    p = sub.add_parser("health", help="gate on a serve's health section")
+    p.add_argument("--bench", required=True,
+                   help="bench JSON from a --health serve (or a bare "
+                        "health report JSON)")
+    p.add_argument("--max-state", default="warn", choices=STATES,
+                   help="worst state that still exits 0 (default: warn — "
+                        "only a page fails the gate)")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_health)
+
+    p = sub.add_parser("postmortem", help="list flight-recorder bundles")
+    p.add_argument("--dir", required=True,
+                   help="post-mortem dir (postmortem-*.json)")
+    p.add_argument("--require", type=int, default=0, metavar="N",
+                   help="exit 1 unless >= N bundles are present (CI gate)")
+    p.add_argument("--last", action="store_true",
+                   help="also print the newest bundle in full")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_postmortem)
+
+    p = sub.add_parser("diff", help="bench regression sentinel")
+    p.add_argument("--bench", nargs="+", required=True,
+                   help="current BENCH_*.json file(s)")
+    p.add_argument("--baseline-dir", required=True,
+                   help="committed baselines (same filenames)")
+    p.add_argument("--tolerances", default=None,
+                   help="tolerances.json overriding the default rules "
+                        "(default: <baseline-dir>/tolerances.json if "
+                        "present)")
+    p.add_argument("--history-dir", default=None,
+                   help="append each compared run here (CI artifact)")
+    p.add_argument("--require-baseline", action="store_true",
+                   help="exit 1 when a bench has no committed baseline")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_diff)
+
+    args = ap.parse_args(argv)
+    if args.command == "diff" and args.tolerances is None:
+        cand = Path(args.baseline_dir) / "tolerances.json"
+        args.tolerances = str(cand) if cand.exists() else None
+    return args.fn(args)
 
 
 if __name__ == "__main__":

@@ -48,6 +48,7 @@ from typing import Callable, Iterator
 
 __all__ = [
     "TRACE_DIR_ENV",
+    "DEFAULT_SEGMENT_BYTES",
     "Tracer",
     "SpanHandle",
     "atomic_write_json",
@@ -60,6 +61,12 @@ __all__ = [
 ]
 
 TRACE_DIR_ENV = "REPRO_TRACE_DIR"
+
+# rotate a process's span file once it crosses this many bytes: a
+# long-running serve keeps a bounded active segment, and the rotated
+# segments still match the ``spans-*.jsonl`` read glob so the merge is
+# unchanged.  0 disables rotation.
+DEFAULT_SEGMENT_BYTES = 8 * 1024 * 1024
 
 
 def atomic_write_json(path: Path | str, doc: dict) -> None:
@@ -112,7 +119,8 @@ class Tracer:
 
     def __init__(self, root: str | os.PathLike, *,
                  clock: Callable[[], float] = time.time,
-                 process_tag: str | None = None) -> None:
+                 process_tag: str | None = None,
+                 max_segment_bytes: int = DEFAULT_SEGMENT_BYTES) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self._clock = clock
@@ -123,6 +131,9 @@ class Tracer:
         self._fh = None
         self._local = threading.local()
         self._lock = threading.Lock()
+        self.max_segment_bytes = int(max_segment_bytes)
+        self._size = 0
+        self._rot = 0
 
     def _default_tag(self) -> str:
         return f"{socket.gethostname()}-{os.getpid()}"
@@ -147,14 +158,36 @@ class Tracer:
             self._seq = 0
             self._fh = None
             self._local = threading.local()
+            self._size = 0
+            self._rot = 0
+
+    def _rotate_locked(self) -> None:
+        """Seal the active segment under a numbered name (still matching
+        the ``spans-*.jsonl`` read glob) and start a fresh one.  Rotation
+        happens at line boundaries only, so a rotated segment is never
+        torn — only a crashed writer's *active* tail can be."""
+        self._fh.close()
+        while True:
+            rotated = self.root / f"spans-{self._tag}.{self._rot:04d}.jsonl"
+            self._rot += 1
+            if not rotated.exists():
+                break
+        os.replace(self.path, rotated)
+        self._fh = open(self.path, "a")
+        self._size = 0
 
     def _write(self, doc: dict) -> None:
-        line = json.dumps(doc, sort_keys=True)
+        data = json.dumps(doc, sort_keys=True) + "\n"
         with self._lock:
             if self._fh is None:
                 self._fh = open(self.path, "a")
-            self._fh.write(line + "\n")
+                self._size = self.path.stat().st_size
+            if (self.max_segment_bytes > 0 and self._size > 0
+                    and self._size + len(data) > self.max_segment_bytes):
+                self._rotate_locked()
+            self._fh.write(data)
             self._fh.flush()
+            self._size += len(data)
 
     def _next_id(self, name: str, parent_id: str | None) -> str:
         with self._lock:
@@ -183,10 +216,13 @@ class Tracer:
                 "attrs": handle.attrs,
             })
 
-    def event(self, name: str, **attrs) -> None:
-        """Zero-duration span: swap decisions, refreshes, cause markers."""
-        with self.span(name, **attrs):
+    def event(self, name: str, **attrs) -> str:
+        """Zero-duration span: swap decisions, refreshes, cause markers.
+        Returns the span id so callers (the health plane's anomaly
+        attribution) can name the exact trace event later."""
+        with self.span(name, **attrs) as handle:
             pass
+        return handle.span_id
 
     def close(self) -> None:
         with self._lock:
@@ -205,12 +241,14 @@ _checked_env = False
 def configure(root: str | os.PathLike, *,
               clock: Callable[[], float] = time.time,
               process_tag: str | None = None,
-              export_env: bool = True) -> Tracer:
+              export_env: bool = True,
+              max_segment_bytes: int = DEFAULT_SEGMENT_BYTES) -> Tracer:
     """Install the process-global tracer.  ``export_env`` publishes the
     trace dir to child processes (fleet pool workers, spawned or forked)
     through :data:`TRACE_DIR_ENV`."""
     global _tracer, _checked_env
-    _tracer = Tracer(root, clock=clock, process_tag=process_tag)
+    _tracer = Tracer(root, clock=clock, process_tag=process_tag,
+                     max_segment_bytes=max_segment_bytes)
     _checked_env = True
     if export_env:
         os.environ[TRACE_DIR_ENV] = str(Path(root))
@@ -256,17 +294,22 @@ def span(name: str, **attrs) -> Iterator[SpanHandle]:
         yield handle
 
 
-def event(name: str, **attrs) -> None:
+def event(name: str, **attrs) -> str:
+    """Emit a zero-duration span; returns its id ("" when tracing is
+    off) so control-plane callers can hand the id to attribution."""
     t = current_tracer()
-    if t is not None:
-        t.event(name, **attrs)
+    if t is None:
+        return ""
+    return t.event(name, **attrs)
 
 
 # ---------------------------------------------------------------------------
 # read-time merge
 # ---------------------------------------------------------------------------
 def read_trace(root: str | os.PathLike) -> list[dict]:
-    """Union every per-process span file under ``root``.
+    """Union every per-process span file under ``root`` — including
+    rotated segments (``spans-<tag>.<n>.jsonl``), which the glob matches
+    by construction.
 
     Skips torn (crash-truncated) lines, dedups by span id — so reading a
     dir whose files were re-copied or doubled is idempotent — and returns

@@ -100,6 +100,13 @@ class ServingEngine:
         self._warmup = warmup_caches
         self._trace_count = 0
         self.last_tokens: np.ndarray | None = None   # (n_requests, gen_len)
+        # the SLO health plane (obs.health.HealthPlane), bound by serve()/
+        # start(); every control-plane trace event is mirrored into it so
+        # fired anomalies attribute to the exact swap/refresh/control span
+        self._health = None
+        # test/chaos hook: extra seconds slept inside the *timed* step
+        # section — the induced-latency-spike drill flips this mid-serve
+        self.inject_step_delay = 0.0
 
         self._adaptive = plan is not None
         self._plan = plan
@@ -222,8 +229,12 @@ class ServingEngine:
             telemetry.register_plan(plan)
             telemetry.record_swap(batch=batch_idx, reason=reason,
                                   old=old_id, new=plan.plan_id)
-        trace_event("serve.swap", reason=reason, batch=batch_idx,
-                    old=old_id, new=plan.plan_id)
+        eid = trace_event("serve.swap", reason=reason, batch=batch_idx,
+                          old=old_id, new=plan.plan_id)
+        if self._health is not None:
+            self._health.note_event("serve.swap", step=batch_idx,
+                                    event_id=eid, reason=reason,
+                                    old=old_id, new=plan.plan_id)
         return True
 
     def refresh_library(self, compiled, exact_area: float, *,
@@ -457,6 +468,7 @@ class ServingEngine:
         seed: int = 0,
         on_batch_end: Callable[["ServingEngine", int], None] | None = None,
         log: Callable[[str], None] | None = None,
+        health=None,
     ) -> Telemetry:
         """Run the full serving loop over a synthetic load profile.
 
@@ -476,6 +488,7 @@ class ServingEngine:
         if scheduler is not None:
             assert self._adaptive, "class-aware serving needs a QoS plan"
         telemetry = telemetry or Telemetry()
+        self._health = health
         if self._adaptive:
             telemetry.register_plan(self._plan)
         per_tick = synth_requests(profile, self.cfg.vocab_size, seed)
@@ -567,6 +580,15 @@ class ServingEngine:
                         scheduler.observe(cls, stats.drift)
                     if online is not None:
                         online.update(self._plan_maes(plan_b), stats.drift)
+                if health is not None:
+                    health.observe_step(
+                        step=batch_idx, step_ms=stats.ms_per_step,
+                        classes={cls: {}} if cls is not None else {},
+                        drift=stats.drift, backlog=backlog,
+                        plan_id=plan_b.plan_id if self._adaptive else None,
+                        level=glevel,
+                        class_state=(scheduler.snapshot(glevel)
+                                     if scheduler is not None else None))
 
                 # ---- between-batch control plane ------------------------
                 if watcher is not None and self._adaptive and watcher.poll():
@@ -587,8 +609,12 @@ class ServingEngine:
                                 compiled, exact_area, controller=controller,
                                 scheduler=scheduler, telemetry=telemetry,
                                 batch_idx=batch_idx)
-                        trace_event("serve.refresh", cause="watcher",
-                                    changed=changed, batch=batch_idx)
+                        eid = trace_event("serve.refresh", cause="watcher",
+                                          changed=changed, batch=batch_idx)
+                        if health is not None:
+                            health.note_event("serve.refresh",
+                                              step=batch_idx, event_id=eid,
+                                              changed=changed)
                         if changed and log:
                             log(f"batch {batch_idx}: library refresh -> "
                                 f"plan {self._plan.plan_id}")
@@ -615,9 +641,14 @@ class ServingEngine:
                                  else None)
                     level = controller.observe(eff_ms, drift_sig)
                     if level is not None:
-                        trace_event("serve.control", level=level,
-                                    cause=controller.last_reason,
-                                    batch=batch_idx)
+                        eid = trace_event("serve.control", level=level,
+                                          cause=controller.last_reason,
+                                          batch=batch_idx)
+                        if health is not None:
+                            health.note_event("serve.control",
+                                              step=batch_idx, event_id=eid,
+                                              level=level,
+                                              cause=controller.last_reason)
                         if scheduler is None:
                             moved = self.swap_plan(
                                 controller.plan, controller.luts(),
@@ -753,7 +784,7 @@ class ContinuousServingEngine(ServingEngine):
     # ----------------------------------------------------------------- setup
     def start(self, *, telemetry: Telemetry | None = None, controller=None,
               watcher=None, scheduler=None, online=None,
-              shadow_every: int | None = None,
+              shadow_every: int | None = None, health=None,
               log: Callable[[str], None] | None = None) -> Telemetry:
         """Bind the control plane and reset all serving state (slots,
         pages, queues, caches).  Callable directly (the router drives
@@ -766,6 +797,7 @@ class ContinuousServingEngine(ServingEngine):
         self.telemetry = telemetry or Telemetry()
         self._controller, self._watcher = controller, watcher
         self._scheduler, self._online, self._log = scheduler, online, log
+        self._health = health
         if shadow_every is not None:
             self._shadow_every = max(1, int(shadow_every))
         elif controller is not None:
@@ -853,8 +885,12 @@ class ContinuousServingEngine(ServingEngine):
         self.telemetry.record_preemption(
             step=self._step_idx, victim_rid=seq.rid, victim_class=seq.cls,
             by_class=by_cls)
-        trace_event("serve.preempt", step=self._step_idx, rid=seq.rid,
-                    victim=seq.cls, by=by_cls)
+        eid = trace_event("serve.preempt", step=self._step_idx, rid=seq.rid,
+                          victim=seq.cls, by=by_cls)
+        if self._health is not None:
+            self._health.note_event("serve.preempt", step=self._step_idx,
+                                    event_id=eid, rid=seq.rid,
+                                    victim=seq.cls, by=by_cls)
         if self._log:
             self._log(f"step {self._step_idx}: preempt rid={seq.rid} "
                       f"({seq.cls}) for {by_cls}")
@@ -927,6 +963,7 @@ class ContinuousServingEngine(ServingEngine):
         Returns ``False`` (and runs nothing) when no slot is active."""
         assert self._started, "call start() before step_once()"
         now = time.perf_counter() if now is None else now
+        preempts_before = self._n_preemptions
         self._admit(now)
         occupied = list(self._pool)
         if not occupied:
@@ -967,6 +1004,11 @@ class ContinuousServingEngine(ServingEngine):
                 shadow_logits.block_until_ready()
                 shadow_s = time.perf_counter() - ts
         t0 = time.perf_counter()
+        if self.inject_step_delay:
+            # chaos hook: the sleep sits inside the timed section, so an
+            # injected latency spike is indistinguishable from a real one
+            # to the telemetry, the SLO monitors and the detectors
+            time.sleep(self.inject_step_delay)
         if self._adaptive:
             logits, self._caches = self._jit_step(
                 self.params, self._caches, *jt, luts)
@@ -1018,6 +1060,21 @@ class ContinuousServingEngine(ServingEngine):
                                for r in by_class.values()),
             plan_id=plan_b.plan_id if self._adaptive else None,
             drift=drift, backlog=backlog, occupancy=occ)
+        self.telemetry.record_pages(used=self._alloc.used_pages,
+                                    total=self._alloc.n_pages)
+        if self._health is not None:
+            self._health.observe_step(
+                step=self._step_idx, step_ms=1e3 * step_s,
+                classes=by_class, drift=drift, backlog=backlog,
+                occupancy=occ,
+                preemptions=self._n_preemptions - preempts_before,
+                plan_id=plan_b.plan_id if self._adaptive else None,
+                level=glevel,
+                pages={"used": self._alloc.used_pages,
+                       "free": self._alloc.free_pages,
+                       "total": self._alloc.n_pages},
+                class_state=(self._scheduler.snapshot(glevel)
+                             if self._scheduler is not None else None))
 
         self._control_plane(step_s, drift, plan_b, glevel, backlog, occ)
         self._step_idx += 1
@@ -1045,8 +1102,12 @@ class ContinuousServingEngine(ServingEngine):
                         compiled, exact_area, controller=controller,
                         scheduler=scheduler, telemetry=self.telemetry,
                         batch_idx=self._step_idx)
-                trace_event("serve.refresh", cause="watcher",
-                            changed=changed, batch=self._step_idx)
+                eid = trace_event("serve.refresh", cause="watcher",
+                                  changed=changed, batch=self._step_idx)
+                if self._health is not None:
+                    self._health.note_event("serve.refresh",
+                                            step=self._step_idx,
+                                            event_id=eid, changed=changed)
                 if changed and self._log:
                     self._log(f"step {self._step_idx}: library refresh -> "
                               f"plan {self._plan.plan_id}")
@@ -1068,9 +1129,14 @@ class ContinuousServingEngine(ServingEngine):
                          else None)
             level = controller.observe(eff_ms, drift_sig)
             if level is not None:
-                trace_event("serve.control", level=level,
-                            cause=controller.last_reason,
-                            batch=self._step_idx)
+                eid = trace_event("serve.control", level=level,
+                                  cause=controller.last_reason,
+                                  batch=self._step_idx)
+                if self._health is not None:
+                    self._health.note_event("serve.control",
+                                            step=self._step_idx,
+                                            event_id=eid, level=level,
+                                            cause=controller.last_reason)
                 if scheduler is None:
                     moved = self.swap_plan(
                         controller.plan, controller.luts(),
@@ -1099,7 +1165,8 @@ class ContinuousServingEngine(ServingEngine):
               steps_per_tick: int | None = None,
               on_step_end: Callable[["ContinuousServingEngine", int],
                                     None] | None = None,
-              log: Callable[[str], None] | None = None) -> Telemetry:
+              log: Callable[[str], None] | None = None,
+              health=None) -> Telemetry:
         """Serve a synthetic load profile continuously: each tick's
         arrivals join the admission queues, then up to ``steps_per_tick``
         decode steps run before the next tick's arrivals — requests keep
@@ -1111,22 +1178,29 @@ class ContinuousServingEngine(ServingEngine):
         assert profile.gen_len == self.gen_len
         telemetry = self.start(telemetry=telemetry, controller=controller,
                                watcher=watcher, scheduler=scheduler,
-                               online=online, log=log)
+                               online=online, health=health, log=log)
         steps = steps_per_tick or self.steps_per_tick
         per_tick = synth_requests(profile, self.cfg.vocab_size, seed)
-        with trace_span("serve.continuous", slots=self.max_slots,
-                        pages=self.n_pages):
-            for tick in range(profile.n_ticks):
-                self._tick = tick
-                now = time.perf_counter()
-                for r in per_tick[tick]:
-                    self.submit(r, now)
-                for _ in range(steps):
-                    if not self.step_once():
-                        break
+        try:
+            with trace_span("serve.continuous", slots=self.max_slots,
+                            pages=self.n_pages):
+                for tick in range(profile.n_ticks):
+                    self._tick = tick
+                    now = time.perf_counter()
+                    for r in per_tick[tick]:
+                        self.submit(r, now)
+                    for _ in range(steps):
+                        if not self.step_once():
+                            break
+                        if on_step_end is not None:
+                            on_step_end(self, self._step_idx - 1)
+                while self.step_once():
                     if on_step_end is not None:
                         on_step_end(self, self._step_idx - 1)
-            while self.step_once():
-                if on_step_end is not None:
-                    on_step_end(self, self._step_idx - 1)
+        except BaseException as e:
+            # the flight recorder's crash path: freeze the ring before the
+            # exception unwinds past the serve loop, then re-raise
+            if self._health is not None:
+                self._health.record_crash(e)
+            raise
         return telemetry

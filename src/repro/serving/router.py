@@ -48,6 +48,16 @@ class Replica:
     online: object | None = None
     classes: tuple[str, ...] = ()    # QoS classes homed here ((): any)
     telemetry: Telemetry = field(default_factory=Telemetry)
+    # per-replica obs.health.HealthPlane: its ok/warn/page state adds a
+    # routing penalty so a degraded replica sheds load to healthy peers
+    health: object | None = None
+
+    @property
+    def routing_score(self) -> float:
+        score = self.engine.load_score
+        if self.health is not None:
+            score += self.health.penalty
+        return score
 
 
 class ReplicaRouter:
@@ -64,14 +74,18 @@ class ReplicaRouter:
 
     # ----------------------------------------------------------------- route
     def route(self, request: Request) -> Replica:
-        """Class affinity first, then least-loaded.  Affinity is a
-        preference, not a wall: if no replica claims the class (or the
+        """Class affinity first, then least-loaded *healthy*.  Affinity is
+        a preference, not a wall: if no replica claims the class (or the
         claiming replicas are the only ones and all is equal) the load
-        tie-break still yields a deterministic home."""
+        tie-break still yields a deterministic home.  A replica whose
+        health plane reports warn/page carries a load-score penalty
+        (:attr:`Replica.routing_score`) so it measurably sheds admissions
+        while it burns — without being black-holed: it still wins when
+        every healthy peer is proportionally busier."""
         homed = [r for r in self.replicas
                  if request.qos_class in r.classes]
         candidates = homed or self.replicas
-        return min(candidates, key=lambda r: r.engine.load_score)
+        return min(candidates, key=lambda r: r.routing_score)
 
     def submit(self, request: Request, now: float | None = None) -> Replica:
         r = self.route(request)
@@ -83,7 +97,8 @@ class ReplicaRouter:
     def start(self, *, log: Callable[[str], None] | None = None) -> None:
         for r in self.replicas:
             r.engine.start(telemetry=r.telemetry, controller=r.controller,
-                           scheduler=r.scheduler, online=r.online, log=log)
+                           scheduler=r.scheduler, online=r.online,
+                           health=r.health, log=log)
 
     def step_all(self) -> bool:
         """One decode step on every replica with active work."""
@@ -156,6 +171,8 @@ class ReplicaRouter:
             if r.engine.plan is not None:
                 s["plan"] = r.engine.plan.plan_id
                 s["widths"] = list(r.engine.widths)
+            if r.health is not None:
+                s["health"] = r.health.report()
             per[r.name] = s
         total_req = sum(s["requests"] for s in per.values())
         return {

@@ -186,6 +186,15 @@ class Telemetry:
             "occupancy": round(occupancy, 3),
         })
 
+    def record_pages(self, *, used: int, total: int) -> None:
+        """Page-pool occupancy gauges (continuous engine, per step) —
+        these ride the registry so the Prometheus text and trace-dir
+        snapshots carry KV pressure, not just slot occupancy."""
+        self.registry.gauge("serve_page_pool_used").set(used)
+        self.registry.gauge("serve_page_pool_pages").set(total)
+        self.registry.gauge("serve_page_pool_occupancy").set(
+            used / total if total else 0.0)
+
     def record_ttft(self, qos_class: str | None, ttft_s: float) -> None:
         """Time-to-first-token for one request: admission (entering the
         engine's queue) to the step that produced its first generated

@@ -1,0 +1,826 @@
+"""SLO health plane: burn-rate math against hand-computed values,
+robust streaming detectors (step/spike/ramp fire exactly once, seeded
+noise never fires), anomaly attribution to control events, the flight
+recorder's bounded ring + atomic post-mortems, the bench regression
+sentinel, trace segment rotation, and the serving e2e drill (induced
+latency spike -> paged SLO + anomaly pinned to the exact swap event id +
+readable post-mortem bundle, with the decode step still traced once).
+"""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.__main__ import main as obs_main
+from repro.obs.anomaly import (AnomalyPlane, EventLog, RobustDetector,
+                               robust_zscores)
+from repro.obs.flight import FlightRecorder, read_postmortems
+from repro.obs.health import (BurnRate, HealthPlane, SLOMonitor,
+                              state_penalty, state_rank)
+from repro.obs.metrics import MetricRegistry
+from repro.obs.regress import (Rule, compare_bench, flatten, load_rules,
+                               record_history)
+from repro.obs.trace import Tracer, read_trace
+
+
+@pytest.fixture(autouse=True)
+def _isolate_obs_globals():
+    """Every test gets a pristine global tracer and registry."""
+    obs_trace.reset()
+    prev = obs_metrics.set_registry(MetricRegistry())
+    yield
+    obs_trace.reset()
+    obs_metrics.set_registry(prev)
+
+
+def _fixed_clock():
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    return clock
+
+
+# alpha=1.0 turns the EWMA into the raw sample, so the detector math in
+# these tests is exactly hand-checkable
+DET = dict(window=32, warmup=8, threshold=6.0, alpha=1.0)
+
+
+# ---------------------------------------------------------------------------
+# robust z-scores (batch form, used by fleet outlier flagging)
+# ---------------------------------------------------------------------------
+def test_robust_zscores_hand_computed():
+    # median 4, MAD 2 -> scale 1.4826 * 2
+    zs = robust_zscores([2.0, 4.0, 6.0])
+    assert zs[1] == 0.0
+    assert zs[0] == pytest.approx(-2.0 / (1.4826 * 2.0))
+    assert zs[2] == pytest.approx(+2.0 / (1.4826 * 2.0))
+    # zero MAD: exact-median samples score 0, departures score huge
+    zs = robust_zscores([1.0, 1.0, 1.0, 1.0, 9.0])
+    assert zs[:4] == [0.0] * 4 and zs[4] > 1e6
+    # degenerate inputs never divide by zero
+    assert robust_zscores([]) == []
+    assert robust_zscores([5.0]) == [0.0]
+
+
+# ---------------------------------------------------------------------------
+# streaming detector: step / spike / ramp fire exactly once
+# ---------------------------------------------------------------------------
+def test_step_change_fires_exactly_once():
+    det = RobustDetector("ms", **DET)
+    fires = [det.observe(1.0, i) for i in range(20)]
+    fires += [det.observe(5.0, 20 + i) for i in range(40)]
+    fired = [f for f in fires if f is not None]
+    assert len(fired) == 1 and det.fired == 1
+    a = fired[0]
+    assert a.signal == "ms" and a.step == 20 and a.direction == "up"
+    assert a.baseline == pytest.approx(1.0)
+    assert a.value == pytest.approx(5.0)
+
+
+def test_single_spike_fires_exactly_once_then_recovers():
+    det = RobustDetector("ms", **DET)
+    fired = []
+    for step, v in enumerate([2.0] * 15 + [50.0] + [2.0] * 25):
+        a = det.observe(v, step)
+        if a is not None:
+            fired.append(a)
+    assert [a.step for a in fired] == [15]
+    assert fired[0].direction == "up"
+    # after re-baselining at the spike, the return to normal is the new
+    # normal's own level, not a second anomaly
+    assert det.fired == 1
+
+
+def test_ramp_fires_exactly_once():
+    det = RobustDetector("ms", **DET)
+    fired = []
+    for i in range(20):
+        assert det.observe(1.0, i) is None
+    for k in range(1, 60):
+        a = det.observe(1.0 + 0.5 * k, 20 + k)
+        if a is not None:
+            fired.append(a)
+    # the departure from the flat baseline fires; once re-baselined
+    # mid-ramp, the constant slope never scores 6 sigma again
+    assert [a.step for a in fired] == [21]
+    assert fired[0].direction == "up"
+
+
+def test_downward_step_fires_with_down_direction():
+    det = RobustDetector("tok_s", **DET)
+    fired = [det.observe(v, i) for i, v in
+             enumerate([100.0] * 15 + [20.0] * 15)]
+    fired = [f for f in fired if f]
+    assert len(fired) == 1 and fired[0].direction == "down"
+
+
+def test_steady_noise_zero_false_positives_10k_steps():
+    det = RobustDetector("ms")   # production defaults
+    rng = np.random.default_rng(0)
+    for step, v in enumerate(5.0 + 0.5 * rng.standard_normal(10_000)):
+        assert det.observe(float(v), step) is None
+    assert det.fired == 0
+
+
+def test_detector_validation():
+    with pytest.raises(ValueError):
+        RobustDetector("x", alpha=0.0)
+    with pytest.raises(ValueError):
+        RobustDetector("x", warmup=1)
+    with pytest.raises(ValueError):
+        RobustDetector("x", window=4, warmup=8)
+
+
+# ---------------------------------------------------------------------------
+# attribution: event log + anomaly plane
+# ---------------------------------------------------------------------------
+def test_event_log_nearest_prior_within_horizon():
+    log = EventLog()
+    log.note("serve.swap", 5, "e0")
+    log.note("serve.refresh", 18, "e1")
+    log.note("serve.control", 40, "e2")
+    assert log.nearest(20).event_id == "e1"     # most recent prior
+    assert log.nearest(18).event_id == "e1"     # at-step counts
+    assert log.nearest(4) is None               # nothing prior
+    assert log.nearest(100).event_id == "e2"    # 60 steps back, in horizon
+    assert log.nearest(110) is None             # 70 steps back, beyond it
+    # bounded ring
+    small = EventLog(capacity=2)
+    for i in range(5):
+        small.note("ev", i)
+    assert [e.step for e in small.events()] == [3, 4]
+
+
+def test_anomaly_plane_attributes_to_nearest_event():
+    plane = AnomalyPlane(configs={"ms": DET})
+    plane.note_event("serve.swap", 3, "ev-old", reason="early")
+    for i in range(20):
+        if i == 18:
+            plane.note_event("serve.swap", 18, "ev-swap", reason="drill")
+        assert plane.observe("ms", 1.0, i) is None
+    fired = plane.observe("ms", 9.0, 20)
+    assert fired is not None
+    assert fired.cause.name == "serve.swap"
+    assert fired.cause.event_id == "ev-swap"
+    assert fired.cause.attrs == {"reason": "drill"}
+    doc = fired.to_doc()
+    assert doc["cause"]["distance"] == 2
+    assert "ev-swap" in fired.describe()
+    assert plane.fired_total == 1
+    assert plane.to_doc()["by_signal"] == {"ms": 1}
+
+
+def test_anomaly_without_recent_event_has_no_cause():
+    plane = AnomalyPlane(configs={"ms": DET})
+    for i in range(20):
+        plane.observe("ms", 1.0, i)
+    fired = plane.observe("ms", 9.0, 20)
+    assert fired is not None and fired.cause is None
+    assert "no recent event" in fired.describe()
+    assert "cause" not in fired.to_doc()
+
+
+# ---------------------------------------------------------------------------
+# burn rates: hand-computed multi-window math + hysteresis
+# ---------------------------------------------------------------------------
+def test_burn_rate_hand_computed_sequence():
+    br = BurnRate(budget=0.25, short_window=4, long_window=8,
+                  warn_burn=1.0, page_burn=2.0, clear_patience=2,
+                  min_count=2)
+    assert br.observe(False) == "ok"       # 1 obs < min_count: cold start
+    assert br.observe(True) == "page"      # 1 bad / 2 obs: burn 2.0 both
+    assert br.burn_short == pytest.approx((1 / 2) / 0.25)
+    assert br.burn_long == pytest.approx(2.0)
+    assert br.observe(False) == "page"     # target warn, hysteresis holds
+    assert br.burn_short == pytest.approx((1 / 3) / 0.25)
+    assert br.observe(False) == "warn"     # 2nd calm eval: de-escalate
+    assert br.burn_short == pytest.approx((1 / 4) / 0.25)
+    assert br.observe(False) == "warn"     # long window calm: patience 1 of 2
+    assert br.burn_short == pytest.approx(1.0)   # short deque [1,0,0,0]
+    assert br.burn_long == pytest.approx((1 / 5) / 0.25)
+    assert br.observe(False) == "ok"       # patience 2 of 2
+    assert br.burn_short == 0.0
+    assert br.burn_long == pytest.approx((1 / 6) / 0.25)
+    assert br.observations == 6 and br.violations == 1
+    doc = br.to_doc()
+    assert doc["state"] == "ok" and doc["budget"] == 0.25
+
+
+def test_burn_rate_pages_need_both_windows_hot():
+    # short window saturates instantly but the long window refuses to
+    # page on a blip: 2 bad out of 20 long obs = burn 0.4 < 2.0
+    br = BurnRate(budget=0.25, short_window=2, long_window=20,
+                  min_count=1, clear_patience=1)
+    for _ in range(18):
+        br.observe(False)
+    br.observe(True)
+    state = br.observe(True)
+    assert br.burn_short == pytest.approx(4.0)      # 2/2 / 0.25
+    assert br.burn_long == pytest.approx((2 / 20) / 0.25)
+    assert state == "ok", "a blip paged despite a calm long window"
+
+
+def test_burn_rate_cold_start_guard_and_validation():
+    br = BurnRate(budget=0.5, short_window=8, long_window=8, min_count=4)
+    assert [br.observe(True) for _ in range(3)] == ["ok"] * 3
+    assert br.observe(True) == "page"   # 4th obs clears min_count
+    for bad in (dict(budget=0.0), dict(budget=1.5),
+                dict(budget=0.1, short_window=8, long_window=4),
+                dict(budget=0.1, warn_burn=2.0, page_burn=1.0)):
+        with pytest.raises(ValueError):
+            BurnRate(**bad)
+
+
+def test_slo_monitor_built_from_class_book():
+    from repro.sensitivity.classes import ClassBook
+
+    book = ClassBook.parse("gold:0.02@8ms,batch:0.2")
+    mon = SLOMonitor(book, min_count=1, short_window=4, long_window=8)
+    assert bool(mon)
+    assert set(mon.latency) == {"gold"}          # only gold declared an SLO
+    assert set(mon.drift) == {"gold", "batch"}   # both have finite budgets
+    assert mon.latency["gold"].budget == pytest.approx(0.05)  # 1 - p95
+    assert mon.slo_ms["gold"] == 8.0
+    assert mon.drift_budget["batch"] == pytest.approx(0.2)
+    # feeds route by class; unknown classes are ignored, not invented
+    assert mon.observe_latency("gold", 20.0) is not None
+    assert mon.observe_latency("nope", 20.0) is None
+    assert mon.observe_drift("batch", 0.5) is not None
+    assert mon.class_state("gold") in ("ok", "warn", "page")
+    assert mon.classes == ["batch", "gold"]
+    doc = mon.to_doc()
+    assert doc["gold"]["latency"]["slo_ms"] == 8.0
+    assert "latency" not in doc["batch"]
+    assert not SLOMonitor(None), "empty monitor should be falsy"
+
+
+# ---------------------------------------------------------------------------
+# health plane: monitors + attribution + recorder + gauges, end to end
+# ---------------------------------------------------------------------------
+def test_health_plane_pages_attributes_and_dumps(tmp_path):
+    from repro.sensitivity.classes import ClassBook
+
+    reg = MetricRegistry()
+    hp = HealthPlane(
+        ClassBook.parse("gold:1e9@8ms"), registry=reg,
+        postmortem_dir=tmp_path, tag="t",
+        monitor_config=dict(short_window=4, long_window=8, min_count=2,
+                            clear_patience=1000),
+        anomaly_config=dict(configs={"ms_per_step": DET}))
+    for i in range(20):
+        out = hp.observe_step(step=i, step_ms=1.0, classes={"gold": {}})
+        assert out["state"] == "ok" and not out["anomalies"]
+    assert hp.penalty == 0.0
+    assert reg.find("serve_slo_ok", **{"class": "gold"}).value == 1.0
+
+    hp.note_event("serve.swap", step=19, event_id="ev-1", reason="drill")
+    out = hp.observe_step(step=20, step_ms=50.0, classes={"gold": {}},
+                          backlog=3, occupancy=0.5, preemptions=1,
+                          plan_id="p0", level=1,
+                          pages={"used": 3, "free": 5, "total": 8})
+    # one bad obs: short burn (1/4)/0.05 = 5, long (1/8)/0.05 = 2.5 ->
+    # both >= 2.0, so the transition pages immediately
+    assert out["state"] == "page"
+    assert [(t["class"], t["to"]) for t in out["transitions"]] \
+        == [("gold", "page")]
+    # the detector fired on the same step and pinned the swap
+    spikes = [a for a in out["anomalies"] if a.signal == "ms_per_step"]
+    assert len(spikes) == 1
+    assert spikes[0].cause.event_id == "ev-1"
+    # both triggers dumped a bundle
+    assert len(out["dumps"]) == 2
+    assert hp.pages == 1 and hp.worst_state == "page"
+    assert hp.penalty == state_penalty("page") == 4.0
+
+    # gauges rode the registry (the Prometheus series)
+    assert reg.find("serve_slo_ok", **{"class": "gold"}).value == 0.0
+    assert reg.find("health_state", **{"class": "gold"}).value \
+        == state_rank("page")
+    assert reg.find("health_anomalies").value >= 1
+
+    bundles = read_postmortems(tmp_path)
+    assert {doc["reason"] for _, doc in bundles} == {"slo_breach", "anomaly"}
+    _, doc = bundles[0]
+    assert doc["context"]["plan_id"] == "p0"
+    assert doc["context"]["pages"]["used"] == 3
+    kinds = {f["kind"] for f in doc["frames"]}
+    assert {"step", "event", "anomaly", "slo"} <= kinds
+    assert doc["health"]["state"] == "page"
+
+    rep = hp.report()
+    assert rep["state"] == "page" and rep["pages"] == 1
+    assert rep["recent_anomalies"][-1]["cause"]["event_id"] == "ev-1"
+    assert rep["classes"]["gold"]["latency"]["violations"] == 1
+
+
+def test_health_plane_record_crash_dumps_bundle(tmp_path):
+    hp = HealthPlane(None, registry=MetricRegistry(),
+                     postmortem_dir=tmp_path, tag="c")
+    hp.observe_step(step=0, step_ms=5.0)
+    path = hp.record_crash(RuntimeError("boom"))
+    assert path is not None
+    _, doc = read_postmortems(tmp_path)[0]
+    assert doc["reason"] == "crash" and "boom" in doc["detail"]
+    # without a dir the crash hook is a no-op, never a second crash
+    assert HealthPlane(None, registry=MetricRegistry()).record_crash(
+        RuntimeError("x")) is None
+
+
+def test_health_plane_overhead_is_negligible():
+    from repro.sensitivity.classes import ClassBook
+
+    hp = HealthPlane(ClassBook.parse("gold:0.02@8ms,batch:0.2"),
+                     registry=MetricRegistry())
+    n = 2000
+    t0 = time.perf_counter()
+    for i in range(n):
+        hp.observe_step(step=i, step_ms=10.0 + 0.1 * (i % 7),
+                        classes={"gold": {}, "batch": {}}, drift=0.01,
+                        backlog=i % 3, occupancy=0.5, preemptions=0,
+                        plan_id="p", level=1)
+    per_call_ms = 1e3 * (time.perf_counter() - t0) / n
+    # the acceptance budget: <= 2% of a 10 ms decode step
+    assert per_call_ms < 0.2, f"health plane costs {per_call_ms:.3f} ms/step"
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+def test_flight_recorder_ring_is_bounded():
+    rec = FlightRecorder(capacity=4, tag="t")
+    for i in range(10):
+        rec.note("step", step=i)
+    assert [f["step"] for f in rec.frames] == [6, 7, 8, 9]
+    rec.set_context(plan_id="p", level=None)
+    assert rec.context == {"plan_id": "p", "level": None}
+    assert rec.dump("x") is None, "no dir configured must be a no-op"
+
+
+def test_flight_recorder_dump_cap_and_restart_numbering(tmp_path):
+    rec = FlightRecorder(capacity=8, postmortem_dir=tmp_path, tag="t",
+                         max_bundles=2)
+    rec.note("step", step=0)
+    assert rec.dump("one").name == "postmortem-t-0000.json"
+    assert rec.dump("two").name == "postmortem-t-0001.json"
+    assert rec.dump("three") is None     # cap hit
+    assert rec.dumps == 2 and rec.dumps_suppressed == 1
+    # a restarted recorder into the same dir never overwrites bundles
+    rec2 = FlightRecorder(postmortem_dir=tmp_path, tag="t", max_bundles=2)
+    assert rec2.dump("four").name == "postmortem-t-0002.json"
+    bundles = read_postmortems(tmp_path)
+    assert [doc["reason"] for _, doc in bundles] == ["one", "two", "four"]
+    # atomic writes leave no temp files behind
+    assert all(p.suffix == ".json" for p in tmp_path.iterdir())
+    # foreign/unreadable files are skipped, not fatal
+    (tmp_path / "postmortem-t-9999.json").write_text("{torn")
+    assert len(read_postmortems(tmp_path)) == 3
+
+
+# ---------------------------------------------------------------------------
+# bench regression sentinel
+# ---------------------------------------------------------------------------
+def test_compare_bench_direction_aware_defaults():
+    base = {"decode_tok_s": 200.0, "prefill_tok_s": 100.0,
+            "ms_per_step": 10.0, "trace_count": 1,
+            "wall_s": 5.0, "requests": 8,
+            "classes": {"gold": {"p95_ms_per_step": 8.0}}}
+    cur = {"decode_tok_s": 90.0,     # drop 110 > tol 100: regression
+           "prefill_tok_s": 260.0,   # rise 160 > tol 50: improvement
+           "ms_per_step": 2.0,       # better, but inside rel_tol 1.0: quiet
+           "trace_count": 2,         # exact: any change regresses
+           "wall_s": 50.0,           # ignored
+           "requests": 6}            # unmatched -> catch-all ignore
+    res = compare_bench(cur, base)
+    regs = {f["metric"]: f for f in res["regressions"]}
+    assert set(regs) == {"decode_tok_s", "trace_count",
+                         "classes.gold.p95_ms_per_step"}
+    assert regs["classes.gold.p95_ms_per_step"]["kind"] == "missing"
+    assert regs["trace_count"]["rule"] == "*trace_count*"
+    assert {f["metric"] for f in res["improvements"]} == {"prefill_tok_s"}
+    assert res["compared"] == 4
+
+    # within tolerance: a 25% tok/s wobble is CI noise, not a regression
+    ok = compare_bench({"decode_tok_s": 150.0, "prefill_tok_s": 120.0,
+                        "ms_per_step": 12.0,
+                        "trace_count": 1, "wall_s": 1.0, "requests": 8,
+                        "classes": {"gold": {"p95_ms_per_step": 9.0}}},
+                       base)
+    assert ok["regressions"] == [] and ok["improvements"] == []
+
+
+def test_rule_judging_and_validation():
+    assert Rule("x", "higher", rel_tol=0.1).judge(100, 120) == "improvement"
+    assert Rule("x", "lower", rel_tol=0.1).judge(100, 120) == "regression"
+    assert Rule("x", "both", rel_tol=0.1).judge(100, 105) is None
+    assert Rule("x", "exact").judge("a", "b") == "regression"
+    # bools never take the numeric path (True == 1 would judge by "tolerance")
+    assert Rule("x", "higher").judge(True, False) == "regression"
+    with pytest.raises(ValueError):
+        Rule("x", "weird")
+    with pytest.raises(ValueError):
+        Rule("x", rel_tol=-1.0)
+
+
+def test_flatten_load_rules_and_history(tmp_path):
+    assert flatten({"a": {"b": [1, {"c": 2}]}, "d": 3}) \
+        == {"a.b.0": 1, "a.b.1.c": 2, "d": 3}
+    # loaded rules take precedence, defaults backstop
+    tol = tmp_path / "tolerances.json"
+    tol.write_text(json.dumps(
+        {"rules": [{"pattern": "*requests*", "direction": "exact"}]}))
+    rules = load_rules(tol)
+    res = compare_bench({"requests": 6}, {"requests": 8}, rules)
+    assert res["regressions"][0]["metric"] == "requests"
+    assert load_rules(None) == load_rules(tmp_path / "missing.json")
+    # history: seq-numbered, never overwrites
+    p0 = record_history(tmp_path / "hist", "BENCH_x.json", {"v": 1})
+    p1 = record_history(tmp_path / "hist", "BENCH_x.json", {"v": 2})
+    assert (p0.name, p1.name) == ("BENCH_x-0000.json", "BENCH_x-0001.json")
+    assert json.loads(p1.read_text()) == {"v": 2}
+
+
+def test_obs_cli_diff_gate(tmp_path, capsys):
+    baselines = tmp_path / "baselines"
+    baselines.mkdir()
+    (baselines / "BENCH_x.json").write_text(json.dumps(
+        {"decode_tok_s": 200.0, "trace_count": 1}))
+    cur = tmp_path / "BENCH_x.json"
+    cur.write_text(json.dumps({"decode_tok_s": 90.0, "trace_count": 1}))
+    hist = tmp_path / "hist"
+
+    rc = obs_main(["diff", "--bench", str(cur),
+                   "--baseline-dir", str(baselines),
+                   "--history-dir", str(hist)])
+    out = capsys.readouterr().out
+    assert rc == 1 and "REGRESSION decode_tok_s" in out
+    assert list(hist.glob("BENCH_x-*.json")), "history not recorded"
+
+    cur.write_text(json.dumps({"decode_tok_s": 190.0, "trace_count": 1}))
+    assert obs_main(["diff", "--bench", str(cur),
+                     "--baseline-dir", str(baselines)]) == 0
+
+    # no baseline: informative skip by default, hard gate on demand
+    other = tmp_path / "BENCH_y.json"
+    other.write_text("{}")
+    assert obs_main(["diff", "--bench", str(other),
+                     "--baseline-dir", str(baselines)]) == 0
+    assert obs_main(["diff", "--bench", str(other),
+                     "--baseline-dir", str(baselines),
+                     "--require-baseline"]) == 1
+
+    # committed tolerances.json in the baseline dir is picked up by default
+    (baselines / "tolerances.json").write_text(json.dumps(
+        {"rules": [{"pattern": "*tok_s*", "direction": "higher",
+                    "rel_tol": 0.9}]}))
+    cur.write_text(json.dumps({"decode_tok_s": 90.0, "trace_count": 1}))
+    assert obs_main(["diff", "--bench", str(cur),
+                     "--baseline-dir", str(baselines)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# trace segment rotation
+# ---------------------------------------------------------------------------
+def test_trace_rotation_merges_and_tolerates_torn_tail(tmp_path):
+    tr = Tracer(tmp_path, clock=_fixed_clock(), process_tag="w0",
+                max_segment_bytes=600)
+    ids = [tr.event("tick", i=i) for i in range(30)]
+    tr.close()
+    assert all(ids) and len(set(ids)) == 30   # event() returns span ids
+    segments = sorted(tmp_path.glob("spans-w0.*.jsonl"))
+    assert len(segments) >= 2, "no rotation under a 600-byte cap"
+    assert (tmp_path / "spans-w0.jsonl").exists(), "active file renamed away"
+    # rotation happens at line boundaries: sealed segments are never torn
+    for seg in segments:
+        text = seg.read_text()
+        assert text.endswith("\n")
+        for line in text.splitlines():
+            json.loads(line)
+    spans = read_trace(tmp_path)
+    assert {s["id"] for s in spans} == set(ids)
+    assert [s["attrs"]["i"] for s in spans] == list(range(30))
+    # only the active tail can tear; the reader skips it as before
+    with open(tmp_path / "spans-w0.jsonl", "a") as f:
+        f.write('{"id": "to')
+    assert len(read_trace(tmp_path)) == 30
+
+
+def test_rotation_disabled_and_module_event_off():
+    assert obs_trace.event("x") == "", "unconfigured event must return ''"
+
+
+def test_rotation_zero_disables(tmp_path):
+    tr = Tracer(tmp_path, clock=_fixed_clock(), process_tag="w0",
+                max_segment_bytes=0)
+    for i in range(50):
+        tr.event("tick", i=i)
+    tr.close()
+    assert list(tmp_path.glob("spans-w0.*.jsonl")) == []
+    assert len(read_trace(tmp_path)) == 50
+
+
+# ---------------------------------------------------------------------------
+# CLI: health gate, postmortem reader, summary --json
+# ---------------------------------------------------------------------------
+def test_obs_cli_health_gate(tmp_path, capsys):
+    report = {"state": "page", "anomalies_fired": 2, "pages": 1, "dumps": 1,
+              "classes": {"gold": {"state": "page", "latency": {
+                  "slo_ms": 8.0, "state": "page", "budget": 0.05,
+                  "burn_short": 5.0, "burn_long": 2.5,
+                  "observations": 21, "violations": 1}}},
+              "recent_anomalies": [{
+                  "signal": "ms_per_step", "step": 20, "value": 50.0,
+                  "zscore": 9.0, "baseline": 1.0, "direction": "up",
+                  "cause": {"event": "serve.swap", "step": 19,
+                            "event_id": "ev-1", "attrs": {},
+                            "distance": 1}}]}
+    bench = tmp_path / "BENCH_serve.json"
+    bench.write_text(json.dumps({"decode_tok_s": 10.0, "health": report}))
+    assert obs_main(["health", "--bench", str(bench)]) == 1
+    out = capsys.readouterr().out
+    assert "page" in out and "ev-1" in out and "burn" in out
+    assert obs_main(["health", "--bench", str(bench),
+                     "--max-state", "page"]) == 0
+    # a bare health-report JSON works too
+    bare = tmp_path / "health.json"
+    bare.write_text(json.dumps({**report, "state": "ok"}))
+    assert obs_main(["health", "--bench", str(bare)]) == 0
+    # no health section / no file are usage errors, not gate failures
+    nohealth = tmp_path / "plain.json"
+    nohealth.write_text(json.dumps({"decode_tok_s": 1.0}))
+    assert obs_main(["health", "--bench", str(nohealth)]) == 2
+    assert obs_main(["health", "--bench", str(tmp_path / "nope.json")]) == 2
+
+
+def test_obs_cli_postmortem_gate(tmp_path, capsys):
+    rec = FlightRecorder(postmortem_dir=tmp_path, tag="t")
+    rec.note("step", step=1)
+    rec.dump("slo_breach", detail="gold: ok->page")
+    assert obs_main(["postmortem", "--dir", str(tmp_path),
+                     "--require", "1", "--last"]) == 0
+    out = capsys.readouterr().out
+    assert "slo_breach" in out and "gold: ok->page" in out
+    assert obs_main(["postmortem", "--dir", str(tmp_path),
+                     "--require", "2"]) == 1
+    assert obs_main(["postmortem", "--dir", str(tmp_path / "empty"),
+                     "--require", "1"]) == 1
+
+
+def test_obs_cli_summary_json(tmp_path, capsys):
+    tr = Tracer(tmp_path, clock=_fixed_clock(), process_tag="w0")
+    with tr.span("fleet.job", engine="anneal", n_results=2):
+        pass
+    tr.close()
+    assert obs_main(["summary", "--trace", str(tmp_path), "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["n_spans"] == 1 and doc["n_span_files"] == 1
+    assert doc["span_totals"]["fleet.job"]["count"] == 1
+    assert doc["engines"]["anneal"]["results"] == 2
+    assert doc["slowest"][0]["name"] == "fleet.job"
+    # gates still apply in --json mode
+    assert obs_main(["summary", "--trace", str(tmp_path), "--json",
+                     "--require-span", "serve.decode"]) == 1
+
+
+def test_page_pool_gauges_exported():
+    from repro.obs.export import prometheus_text
+    from repro.serving.telemetry import Telemetry
+
+    tel = Telemetry()
+    tel.record_pages(used=3, total=8)
+    assert tel.registry.find("serve_page_pool_used").value == 3
+    assert tel.registry.find("serve_page_pool_occupancy").value \
+        == pytest.approx(0.375)
+    text = prometheus_text(tel.registry)
+    assert "serve_page_pool_occupancy" in text
+    tel.record_pages(used=0, total=0)   # never divides by zero
+    assert tel.registry.find("serve_page_pool_occupancy").value == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fleet: wall-time outlier flagging
+# ---------------------------------------------------------------------------
+def test_flag_outlier_jobs_groups_and_threshold():
+    from repro.core.engine import SearchJob
+    from repro.fleet.worker import JobResult, flag_outlier_jobs
+
+    def res(seed, engine_s, status="ok"):
+        return JobResult(SearchJob("adder", 2, 1, "anneal", seed=seed),
+                         status, n_results=1, wall_s=engine_s,
+                         engine_s=engine_s)
+
+    results = [res(i, 1.0 + 0.01 * i) for i in range(5)] + [res(9, 50.0)]
+    flagged = flag_outlier_jobs(results)
+    assert len(flagged) == 1
+    r, z = flagged[0]
+    assert r.engine_s == 50.0 and z > 4.0
+    reg = obs_metrics.get_registry()
+    assert reg.find("fleet_job_outliers_total", engine="anneal").value == 1
+    # groups below min_group are skipped (median over 3 flags noise)
+    assert flag_outlier_jobs([res(i, s) for i, s in
+                              enumerate((1.0, 1.0, 99.0))]) == []
+    # failed jobs never enter the statistics
+    failed = [res(i, 1.0) for i in range(4)] + [res(8, 99.0, "failed")]
+    assert flag_outlier_jobs(failed) == []
+
+
+# ---------------------------------------------------------------------------
+# router: health-aware routing (unit, with stub engines)
+# ---------------------------------------------------------------------------
+def test_router_sheds_load_from_degraded_replica():
+    pytest.importorskip("jax")
+    from repro.serving import Replica, ReplicaRouter
+    from repro.serving.loadgen import Request
+
+    class _Eng:
+        def __init__(self, load):
+            self.load_score = load
+
+    class _H:
+        def __init__(self, state):
+            self.state = state
+
+        @property
+        def penalty(self):
+            return state_penalty(self.state)
+
+    degraded = Replica("degraded", _Eng(0.0), health=_H("page"))
+    healthy = Replica("healthy", _Eng(0.0))
+    router = ReplicaRouter([degraded, healthy])
+    tok = np.arange(4, dtype=np.int32)
+    homes = [router.route(Request(i, tok)).name for i in range(16)]
+    # equal raw load: the paged replica's +4.0 penalty sheds every arrival
+    assert set(homes) == {"healthy"}
+    assert degraded.routing_score == pytest.approx(4.0)
+    # ...without black-holing it: a busy-enough healthy peer still loses
+    healthy.engine.load_score = 10.0
+    assert router.route(Request(99, tok)).name == "degraded"
+    degraded.health.state = "warn"
+    assert degraded.routing_score == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# e2e drill: induced latency spike on a live continuous serve
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def drill_setup(tmp_path_factory):
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.core.arith import benchmark
+    from repro.library.compile import load_mul_frontier
+    from repro.models import init_model
+    from repro.serving import PlanLadder
+
+    from test_serving import fill_library, trunc_mul2, zero_mul2
+
+    root = tmp_path_factory.mktemp("healthlib")
+    fill_library(root / "lib", [benchmark("mul_i4"), trunc_mul2(),
+                                zero_mul2()])
+    compiled, exact_area, _ = load_mul_frontier(root / "lib")
+    cfg = get_config("gemma3-1b", reduced=True).with_approx_mlp()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    ladder = PlanLadder.build(compiled, cfg.n_layers,
+                              exact_area=exact_area, levels=4)
+    return cfg, params, compiled, exact_area, ladder
+
+
+def test_e2e_drill_spike_pages_and_attributes_to_swap(drill_setup, tmp_path):
+    """The acceptance drill: a two-class continuous serve with an induced
+    mid-run latency spike must page the SLO, pin the anomaly to the exact
+    swap event id in the trace, and leave a readable post-mortem bundle —
+    all with the decode step still traced exactly once."""
+    from repro.sensitivity.classes import ClassBook, ClassScheduler
+    from repro.serving import ContinuousServingEngine, Telemetry, \
+        make_profile
+
+    cfg, params, compiled, exact_area, ladder = drill_setup
+    trace_dir = tmp_path / "trace"
+    pm_dir = tmp_path / "pm"
+    obs_trace.configure(trace_dir, process_tag="drill")
+
+    # the 50ms SLO rides BOTH classes so the spike pages whichever class
+    # happens to occupy the pool while the injected delay is live
+    book = ClassBook.parse("gold:1e9@50ms,batch:1e9@50ms")
+    scheduler = ClassScheduler(book, ladder, shadow_every=4)
+    hp = HealthPlane(
+        book, postmortem_dir=pm_dir, tag="drill",
+        monitor_config=dict(short_window=6, long_window=12, min_count=3,
+                            clear_patience=10_000),
+        # alpha 1.0 scores the raw step; threshold 12 sits far above CPU
+        # timing jitter yet far below the +1000ms injected spike's z
+        anomaly_config=dict(configs={
+            "ms_per_step": dict(window=32, warmup=8, threshold=12.0,
+                                alpha=1.0)}))
+    prof = make_profile("steady", ticks=3, per_tick=2, prompt_len=8,
+                        gen_len=6,
+                        class_mix=(("gold", 0.5), ("batch", 0.5)))
+    eng = ContinuousServingEngine(
+        cfg, params, max_slots=2, prompt_len=8, gen_len=6, page_size=4,
+        plan=ladder.plan(0), compiled=compiled, exact_area=exact_area)
+
+    INJECT_AT = 14   # past detector warmup, past the last arrival tick
+
+    def chaos(e, step):
+        if step == INJECT_AT:
+            e.swap_plan(ladder.plan(1), ladder.luts(1), reason="drill",
+                        telemetry=e.telemetry, batch_idx=step)
+            e.inject_step_delay = 1.0   # +1000ms, 20x the 50ms SLO
+        elif step == INJECT_AT + 4:
+            # 4 slow steps page the monitors (min_count 3) and fire the
+            # detector; the latch (clear_patience) keeps the state paged
+            e.inject_step_delay = 0.0
+
+    tel = eng.serve(prof, scheduler=scheduler, telemetry=Telemetry(),
+                    seed=0, steps_per_tick=5, health=hp, on_step_end=chaos)
+
+    # the serve completed correctly under chaos, decode traced once
+    assert eng.trace_count == 1
+    assert len(eng.completions) == prof.total_requests
+    assert eng._alloc.used_pages == 0
+    assert tel.summary()["steps"] > INJECT_AT + 3
+
+    # SLO paged and stayed paged (clear_patience pinned for the assert)
+    assert hp.worst_state == "page" and hp.pages >= 1
+    assert sum(m.violations for m in hp.slo.latency.values()) >= 3
+
+    # the spike anomaly fired after injection and is pinned to the swap
+    spikes = [a for a in hp.anomaly.anomalies
+              if a.signal == "ms_per_step" and a.step > INJECT_AT]
+    assert spikes, "induced latency spike never detected"
+    cause = spikes[0].cause
+    assert cause is not None and cause.name == "serve.swap"
+    assert cause.attrs.get("reason") == "drill"
+
+    # ... and the attribution names the *exact* trace event id
+    obs_trace.reset(clear_env=True)
+    swaps = [s for s in read_trace(trace_dir)
+             if s["name"] == "serve.swap"
+             and s.get("attrs", {}).get("reason") == "drill"]
+    assert len(swaps) == 1
+    assert cause.event_id == swaps[0]["id"]
+
+    # post-mortem bundles landed and the CLI reads/gates them
+    bundles = read_postmortems(pm_dir)
+    assert bundles
+    reasons = {doc["reason"] for _, doc in bundles}
+    assert "slo_breach" in reasons
+    _, last = bundles[-1]
+    assert {"step", "event"} <= {f["kind"] for f in last["frames"]}
+    assert obs_main(["postmortem", "--dir", str(pm_dir),
+                     "--require", "1"]) == 0
+
+    # the bench-level health gate fails by default, passes when page is
+    # explicitly allowed
+    bench = tmp_path / "BENCH_drill.json"
+    bench.write_text(json.dumps(
+        {"steps": tel.summary()["steps"], "health": hp.report()}))
+    assert obs_main(["health", "--bench", str(bench)]) == 1
+    assert obs_main(["health", "--bench", str(bench),
+                     "--max-state", "page"]) == 0
+
+
+def test_e2e_router_sheds_admissions_from_paged_replica(drill_setup):
+    """A replica whose health plane reports page must receive measurably
+    fewer admissions than its healthy peer on the same profile."""
+    from repro.serving import (ContinuousServingEngine, Replica,
+                               ReplicaRouter, make_profile)
+
+    cfg, params, compiled, exact_area, ladder = drill_setup
+
+    def mk():
+        return ContinuousServingEngine(
+            cfg, params, max_slots=2, prompt_len=8, gen_len=6, page_size=4,
+            plan=ladder.plan(0), compiled=compiled, exact_area=exact_area)
+
+    degraded_hp = HealthPlane(
+        None, registry=MetricRegistry(),
+        monitor_config=dict(short_window=4, long_window=8, min_count=1,
+                            clear_patience=10 ** 9))
+    degraded_hp.slo.add_latency_slo("gold", 1.0, budget=0.05)
+    for i in range(8):
+        degraded_hp.observe_step(step=i, step_ms=999.0,
+                                 classes={"gold": {}})
+    assert degraded_hp.worst_state == "page"
+
+    router = ReplicaRouter([
+        Replica("degraded", mk(), health=degraded_hp),
+        Replica("healthy", mk(),
+                health=HealthPlane(None, registry=MetricRegistry())),
+    ])
+    prof = make_profile("steady", ticks=3, per_tick=4, prompt_len=8,
+                        gen_len=6)
+    out = router.serve(prof, seed=0)
+    assert out["requests"] == prof.total_requests
+    # listed first, so without the penalty the degraded replica would win
+    # every load tie; with it, the healthy peer takes the bulk
+    assert router.routed["healthy"] > router.routed["degraded"], \
+        router.routed
+    assert out["replicas"]["degraded"]["health"]["state"] == "page"
+    for r in router.replicas:
+        assert r.engine.trace_count == 1
