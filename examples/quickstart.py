@@ -174,6 +174,41 @@ the committed baseline with direction-aware tolerances
 far, ms/step and drift may only rise so far, ``trace_count`` is exact)
 and exits non-zero on regression, recording every run into the history
 dir for trend plots.
+
+Request timelines & provenance
+------------------------------
+Every serving-layer event with a request in scope carries its ``rid``
+(and the replica name under a router), so a ``--trace`` continuous serve
+leaves one causal chain per request in the span stream::
+
+    req.queued -> req.admitted -> req.prefill -> req.decode
+        [-> req.preempt -> req.resume]* -> req.done
+
+``req.done`` carries the host-side breakdown — ``queue_ms``,
+``prefill_ms``, ``decode_ms``, ``suspension_ms`` sum to ``total_ms`` —
+and alongside the spans the engine writes an approximation-provenance
+ledger (``prov-*.jsonl``): per request, which (plan, ladder level,
+per-layer operator keys) decoded which generated-token ranges, plus the
+shadow-drift samples measured in each window.  Ranges seal on plan
+swap, preemption, and completion, so a finished request's ranges tile
+``[0, gen_len)`` exactly — "token 7 of request 12 was decoded by plan
+19a67fec54 at level 2, drift 0.03" is an auditable fact, not a guess:
+
+    python -m repro.launch.serve --reduced --continuous --library runs/lib \
+        --profile runs/lib/_profiles/gemma3-1b.json \
+        --qos-class "gold:0.02@8ms,batch:0.5" --trace runs/trace \
+        --health --bench-json BENCH_prov.json
+    python -m repro.obs requests --trace runs/trace --require-complete
+    python -m repro.obs provenance --trace runs/trace --json
+
+``repro.obs requests`` prints the slowest-first timeline table with each
+request's breakdown and critical path (where its latency actually went:
+queueing, decode, or preemption suspensions); ``--require-complete``
+exits 1 on any broken chain.  ``repro.obs provenance`` audits the
+ledger and exits 1 when any completed request has a gap, overlap, or
+dangling plan reference.  Per-class queueing-delay and suspension-time
+histograms (``serve_queue_delay_ms``, ``serve_suspension_ms``) ride the
+same trace dir into ``repro.obs prom``.
 """
 
 import numpy as np

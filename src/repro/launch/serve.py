@@ -725,6 +725,19 @@ def main() -> None:
         merged = MetricRegistry.from_snapshots(snaps)
         dump_metrics(args.trace, merged)
         print(f"trace -> {args.trace}")
+        if args.continuous:
+            # lifecycle roll-up for the provenance-smoke gate: how many
+            # request chains the trace reconstructs, and how many are
+            # causally complete (python -m repro.obs requests drills in)
+            from ..obs.requests import build_timelines
+            from ..obs.trace import read_trace
+            tls = build_timelines(read_trace(args.trace))
+            s["requests_traced"] = len(tls)
+            s["requests_complete"] = sum(
+                1 for t in tls.values() if t.complete)
+            print(f"  request chains: {s['requests_complete']}/"
+                  f"{s['requests_traced']} complete "
+                  f"(python -m repro.obs requests --trace {args.trace})")
     if args.bench_json:
         write_bench_json(args.bench_json, s)
         print(f"bench summary -> {args.bench_json}")

@@ -18,6 +18,15 @@ read post-mortems, and diff bench runs.
   the bench regression sentinel: direction-aware per-metric comparison
   against committed baselines, optional ``--history-dir`` accumulation,
   exit 1 on any regression.
+* ``requests --trace <dir>`` — per-request lifecycle timelines
+  reconstructed from the ``req.*`` event chains: slowest-first table
+  with the queue/prefill/decode/suspension breakdown and the critical
+  path; ``--require-complete`` exits 1 on any broken chain (the
+  provenance-smoke CI gate), ``--rid`` narrows to one request.
+* ``provenance --trace <dir>`` — audit the approximation-provenance
+  ledger (``prov-*.jsonl``): which plan decoded which token ranges,
+  with drift stats; exits 1 when any completed request has a gap,
+  overlap, or dangling plan reference.
 """
 
 from __future__ import annotations
@@ -31,7 +40,9 @@ from .export import METRICS_GLOB, prometheus_text, read_metrics
 from .flight import read_postmortems
 from .health import STATES, state_rank
 from .metrics import Histogram, MetricRegistry
+from .provenance import audit, read_ledger
 from .regress import compare_bench, load_rules, record_history
+from .requests import build_timelines, critical_path
 from .trace import read_trace
 
 # the metric families the serving telemetry records (kept in one place so
@@ -40,7 +51,8 @@ MS_PER_STEP_METRIC = "serve_ms_per_step"
 DECODE_TOK_S_METRIC = "serve_decode_tok_s"
 ALL_CLASSES = "_all"   # the label the whole-run aggregate rides under
 
-COMMANDS = ("summary", "slowest", "prom", "health", "postmortem", "diff")
+COMMANDS = ("summary", "slowest", "prom", "health", "postmortem", "diff",
+            "requests", "provenance")
 
 
 def _fmt(v, width: int = 9, prec: int = 3) -> str:
@@ -343,6 +355,111 @@ def cmd_diff(args) -> int:
     return rc
 
 
+def cmd_requests(args) -> int:
+    """Per-request lifecycle timelines from the ``req.*`` trace chains."""
+    trace_dir = Path(args.trace)
+    if not trace_dir.is_dir():
+        print(f"no such trace dir: {trace_dir}", file=sys.stderr)
+        return 2
+    timelines = build_timelines(read_trace(trace_dir))
+    if args.rid is not None:
+        timelines = {rid: tl for rid, tl in timelines.items()
+                     if rid == args.rid}
+    if not timelines:
+        print("no req.* lifecycle events in trace (serve without --trace, "
+              "or wrong --rid?)", file=sys.stderr)
+        return 2
+
+    # slowest first; in-flight requests (no total yet) sink to the end
+    order = sorted(timelines.values(),
+                   key=lambda t: -(t.total_ms if t.total_ms is not None
+                                   else -1.0))
+    broken = [t for t in order if not t.complete]
+    if args.json:
+        print(json.dumps({
+            "trace_dir": str(trace_dir),
+            "n_requests": len(order),
+            "n_complete": len(order) - len(broken),
+            "requests": [{
+                "rid": t.rid, "cls": t.cls, "replica": t.replica or None,
+                "total_ms": t.total_ms, "steps": t.steps,
+                "preempts": t.preempts, "resumes": t.resumes,
+                "breakdown": t.breakdown,
+                "critical_path": critical_path(t.breakdown),
+                "events": [e["name"] for e in t.events],
+                "complete": t.complete, "problems": t.problems,
+            } for t in order],
+        }, indent=1, sort_keys=True))
+    else:
+        print(f"{len(order)} request(s) in {trace_dir}, "
+              f"{len(order) - len(broken)} complete chain(s)")
+        print(f"  {'rid':>5s} {'class':8s} {'total':>9s} {'queue':>9s} "
+              f"{'prefill':>9s} {'decode':>9s} {'susp':>9s} {'pre':>3s} "
+              f"{'critical':9s} chain")
+        for t in order[:args.limit]:
+            b = t.breakdown
+            crit = critical_path(b) or "-"
+            state = "ok" if t.complete else "BROKEN"
+            print(f"  {t.rid:5d} {t.cls:8s} {_fmt(t.total_ms)} "
+                  f"{_fmt(b.get('queue_ms'))} {_fmt(b.get('prefill_ms'))} "
+                  f"{_fmt(b.get('decode_ms'))} "
+                  f"{_fmt(b.get('suspension_ms'))} {t.preempts:3d} "
+                  f"{crit.removesuffix('_ms') if crit != '-' else '-':9s} "
+                  f"{state}"
+                  + (f" ({t.replica})" if t.replica else ""))
+        for t in broken:
+            for prob in t.problems:
+                print(f"  rid {t.rid}: {prob}", file=sys.stderr)
+    if args.require_complete and broken:
+        print(f"FAIL: {len(broken)} request(s) with broken lifecycle "
+              f"chains", file=sys.stderr)
+        return 1
+    return 0
+
+
+def cmd_provenance(args) -> int:
+    """Audit the approximation-provenance ledger next to the trace."""
+    trace_dir = Path(args.trace)
+    if not trace_dir.is_dir():
+        print(f"no such trace dir: {trace_dir}", file=sys.stderr)
+        return 2
+    records = read_ledger(trace_dir)
+    if not records:
+        print(f"no prov-*.jsonl records in {trace_dir} (serve without "
+              "--trace, or a non-continuous engine?)", file=sys.stderr)
+        return 2
+    report = audit(records)
+    if args.json:
+        print(json.dumps(report, indent=1, sort_keys=True))
+    else:
+        print(f"{report['n_requests']} request(s), {report['n_done']} "
+              f"done, {report['n_complete']} with gap-free provenance, "
+              f"{report['n_failed']} failed; {len(report['plans'])} "
+              f"plan(s) on record")
+        for rid, rep in report["requests"].items():
+            segs = " ".join(
+                f"[{r['t0']},{r['t1']})@{r['plan'][:12]}"
+                + (f"/L{r['level']}" if r.get("level") is not None else "")
+                for r in rep["ranges"])
+            drift = (f"  drift mean={rep['mean_drift']} "
+                     f"max={rep['max_drift']}"
+                     if "mean_drift" in rep else "")
+            state = ("complete" if rep["complete"]
+                     else "in-flight" if rep["problems"]
+                     and rep["problems"][0].startswith("no done")
+                     else "FAILED")
+            print(f"  rid {rid} ({rep['cls']}): {rep['tokens_covered']} "
+                  f"token(s) {state}  {segs}{drift}")
+            for prob in rep["problems"]:
+                if not prob.startswith("no done"):
+                    print(f"    {prob}", file=sys.stderr)
+    if report["n_failed"]:
+        print(f"FAIL: {report['n_failed']} completed request(s) without "
+              f"gap-free provenance", file=sys.stderr)
+        return 1
+    return 0
+
+
 # ---------------------------------------------------------------------------
 def main(argv: list[str] | None = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
@@ -408,6 +525,25 @@ def main(argv: list[str] | None = None) -> int:
                    help="also print the newest bundle in full")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=cmd_postmortem)
+
+    p = sub.add_parser("requests", help="per-request lifecycle timelines")
+    p.add_argument("--trace", required=True,
+                   help="trace directory with req.* lifecycle events")
+    p.add_argument("--rid", type=int, default=None,
+                   help="narrow to a single request id")
+    p.add_argument("--limit", type=int, default=20,
+                   help="table rows to print (slowest first)")
+    p.add_argument("--require-complete", action="store_true",
+                   help="exit 1 on any broken lifecycle chain (CI gate)")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_requests)
+
+    p = sub.add_parser("provenance",
+                       help="audit the approximation-provenance ledger")
+    p.add_argument("--trace", required=True,
+                   help="trace directory holding prov-*.jsonl")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_provenance)
 
     p = sub.add_parser("diff", help="bench regression sentinel")
     p.add_argument("--bench", nargs="+", required=True,

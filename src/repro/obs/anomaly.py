@@ -15,7 +15,8 @@ Two pieces:
   cooldown, so one step change is one anomaly, not one per step.
 * :class:`EventLog` / :class:`AnomalyPlane` — attribution.  The serving
   engine notes every control action (``serve.swap``, ``serve.refresh``,
-  ``serve.control``, ``serve.preempt``) into a bounded event ring; when a
+  ``serve.control``, ``serve.preempt``, ``serve.resume``) into a
+  bounded event ring; when a
   detector fires, the anomaly is pinned to the nearest *prior* event
   within an attribution horizon — "ms/step stepped +4σ, 2 steps after
   swap 3f2a→91cc (event 8c11…)" instead of just "latency went up".

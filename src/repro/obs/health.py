@@ -298,9 +298,10 @@ class HealthPlane:
     def note_event(self, name: str, step: int | None = None,
                    event_id: str = "", **attrs) -> None:
         """Mirror of a control-plane trace event (``serve.swap``,
-        ``serve.refresh``, ``serve.control``, ``serve.preempt``): feeds
-        anomaly attribution and the flight ring.  ``step`` defaults to
-        the last observed step (events between steps belong to it)."""
+        ``serve.refresh``, ``serve.control``, ``serve.preempt``,
+        ``serve.resume``): feeds anomaly attribution and the flight
+        ring.  ``step`` defaults to the last observed step (events
+        between steps belong to it)."""
         at = self._step if step is None else int(step)
         self.anomaly.note_event(name, at, event_id, **attrs)
         self.recorder.note("event", name=name, step=at,

@@ -139,6 +139,12 @@ class Tracer:
         return f"{socket.gethostname()}-{os.getpid()}"
 
     @property
+    def tag(self) -> str:
+        """The process tag side files (e.g. the provenance ledger's
+        ``prov-<tag>.jsonl``) share so one run's artifacts correlate."""
+        return self._tag
+
+    @property
     def path(self) -> Path:
         return self.root / f"spans-{self._tag}.jsonl"
 

@@ -40,6 +40,7 @@ import numpy as np
 
 from ..library.qos import LayerPlan, refresh_plan, stack_luts, validate_lut_stack
 from ..models import decode_fn, init_caches
+from ..obs.trace import current_tracer
 from ..obs.trace import event as trace_event
 from ..obs.trace import span as trace_span
 from .controller import effective_load_ms
@@ -733,6 +734,9 @@ class ContinuousServingEngine(ServingEngine):
         self.steps_per_tick = (int(steps_per_tick) if steps_per_tick
                                else max(1, int(gen_len)))
         self._init_paged_caches = init_paged_caches
+        # the router stamps its replica name here so every req.* lifecycle
+        # event names the engine that actually served the request
+        self.replica_name = ""
         super().__init__(cfg, params, batch=max_slots, prompt_len=prompt_len,
                          gen_len=gen_len, **kw)
         self._started = False
@@ -784,7 +788,7 @@ class ContinuousServingEngine(ServingEngine):
     # ----------------------------------------------------------------- setup
     def start(self, *, telemetry: Telemetry | None = None, controller=None,
               watcher=None, scheduler=None, online=None,
-              shadow_every: int | None = None, health=None,
+              shadow_every: int | None = None, health=None, provenance=None,
               log: Callable[[str], None] | None = None) -> Telemetry:
         """Bind the control plane and reset all serving state (slots,
         pages, queues, caches).  Callable directly (the router drives
@@ -822,6 +826,17 @@ class ContinuousServingEngine(ServingEngine):
         self._tick = 0
         self._n_preemptions = 0
         self.completions: dict[int, np.ndarray] = {}
+        # approximation-provenance ledger: when tracing is configured the
+        # ledger rides in the trace dir (one shared writer per process, so
+        # router replicas never collide); tests may inject their own
+        self._provenance = provenance
+        if self._provenance is None:
+            tr = current_tracer()
+            if tr is not None:
+                from ..obs.provenance import ledger_for
+
+                self._provenance = ledger_for(tr.root, tr.tag)
+        self._prov_open: dict[int, dict] = {}
         if self._adaptive:
             self.telemetry.register_plan(self._plan)
         self._started = True
@@ -844,6 +859,17 @@ class ContinuousServingEngine(ServingEngine):
             rid=request.rid, cls=cls,
             prompt=np.asarray(request.tokens, np.int32),
             gen_len=self.gen_len, submitted_t=now))
+        self._req_event("req.queued", rid=request.rid, cls=cls,
+                        prompt_len=len(request.tokens))
+
+    def _req_event(self, name: str, **attrs) -> str:
+        """One request-lifecycle trace event; no-op when tracing is off.
+        Every serving-layer event with a request in scope carries its
+        ``rid`` (and the replica name under a router) so the obs side can
+        reconstruct the causal chain per request."""
+        if self.replica_name:
+            attrs["replica"] = self.replica_name
+        return trace_event(name, **attrs)
 
     def _admissible(self, seq) -> bool:
         # a preempted request still holds its pages; a fresh one needs the
@@ -865,13 +891,39 @@ class ContinuousServingEngine(ServingEngine):
                     k: layer[k].at[idx].set(jnp.asarray(v))
                     for k, v in rows.items()}
             seq.ring_rows = None
-        if seq.pos == 0 and seq.preempted == 0:
-            self.telemetry.record_queue(
-                seq.cls if self._scheduler is not None else None,
-                self._queues.depth, [now - seq.submitted_t])
+        cls = seq.cls if self._scheduler is not None else None
+        if seq.suspended_at is not None:
+            # resume path: close out the suspension and say so — both as
+            # a req.* chain link and as a serve.resume *control* event,
+            # so an anomaly right after a resume attributes to the
+            # resume, not to some stale earlier swap
+            susp = now - seq.suspended_at
+            seq.suspended_at = None
+            seq.suspended_s += susp
+            if seq.first_token_t is None:
+                seq.suspended_before_first_s += susp
+            self.telemetry.record_suspension(cls, susp)
+            self._req_event("req.resume", rid=seq.rid, cls=seq.cls,
+                            slot=idx, suspended_ms=round(1e3 * susp, 3))
+            eid = trace_event("serve.resume", step=self._step_idx,
+                              rid=seq.rid, cls=seq.cls)
+            if self._health is not None:
+                self._health.note_event("serve.resume", step=self._step_idx,
+                                        event_id=eid, rid=seq.rid,
+                                        cls=seq.cls)
+        elif seq.admitted_t is None:
+            seq.admitted_t = now
+            seq.queue_wait_s = now - seq.submitted_t
+            self.telemetry.record_queue(cls, self._queues.depth,
+                                        [seq.queue_wait_s])
+            self._req_event("req.admitted", rid=seq.rid, cls=seq.cls,
+                            slot=idx,
+                            queue_ms=round(1e3 * seq.queue_wait_s, 3))
+            self._req_event("req.prefill", rid=seq.rid, cls=seq.cls,
+                            slot=idx, prompt_len=len(seq.prompt))
         self._pool.place(idx, seq)
 
-    def _preempt_slot(self, idx: int, by_cls: str) -> None:
+    def _preempt_slot(self, idx: int, by_cls: str, now: float) -> None:
         seq = self._pool.evict(idx)
         rows: dict[int, dict] = {}
         for li, layer in enumerate(self._caches):
@@ -880,11 +932,15 @@ class ContinuousServingEngine(ServingEngine):
                             "v": np.asarray(layer["v"][idx])}
         seq.ring_rows = rows
         seq.preempted += 1
+        seq.suspended_at = now
         self._n_preemptions += 1
         self._queues.push_front(seq.cls, seq)
+        self._prov_close(seq.rid)
         self.telemetry.record_preemption(
             step=self._step_idx, victim_rid=seq.rid, victim_class=seq.cls,
             by_class=by_cls)
+        self._req_event("req.preempt", rid=seq.rid, cls=seq.cls,
+                        step=self._step_idx, by=by_cls)
         eid = trace_event("serve.preempt", step=self._step_idx, rid=seq.rid,
                           victim=seq.cls, by=by_cls)
         if self._health is not None:
@@ -922,24 +978,57 @@ class ContinuousServingEngine(ServingEngine):
                     lambda n: book.get(n).priority, c.priority)
                 if victim is None:
                     continue
-                self._preempt_slot(victim, by_cls=c.name)
+                self._preempt_slot(victim, by_cls=c.name, now=now)
                 self._place(victim, self._queues.pop(c.name), now)
                 did = True
                 break
             if not did:
                 break
 
+    # ------------------------------------------------------------- provenance
+    def _prov_extend(self, seq, token_idx: int, plan_b, level) -> None:
+        """Charge one generated token to the active plan: extend the
+        request's open decode-step range when the plan is unchanged and
+        contiguous, else seal it and open a new one.  Ranges also seal on
+        preemption and completion, so a finished request's ranges tile
+        ``[0, gen_len)`` exactly — the gap-free audit the provenance CLI
+        gates on."""
+        pid = plan_b.plan_id if plan_b is not None else "exact"
+        r = self._prov_open.get(seq.rid)
+        if r is not None and r["plan"] == pid and r["t1"] == token_idx:
+            r["t1"] = token_idx + 1
+            return
+        if r is not None:
+            self._provenance.record_range(**r)
+        if plan_b is not None:
+            self._provenance.note_plan(
+                plan_b.plan_id, [c.key or "exact" for c in plan_b.choices],
+                width_map=self._width_map)
+        self._prov_open[seq.rid] = {
+            "rid": seq.rid, "cls": seq.cls, "t0": token_idx,
+            "t1": token_idx + 1, "plan": pid, "level": level, "drift": []}
+
+    def _prov_close(self, rid: int) -> None:
+        if self._provenance is None:
+            return
+        r = self._prov_open.pop(rid, None)
+        if r is not None:
+            self._provenance.record_range(**r)
+
     # ------------------------------------------------------------------ step
     def _resolve_stack(self, active_classes):
         """The step's LUT stack: with a scheduler, the batch decodes at
         the level of its *strictest* active class (slots share one step,
         so the most exacting tenant sets the table for everyone in it —
-        per-class plans separate again at the router's replica level)."""
+        per-class plans separate again at the router's replica level).
+        Returns ``(luts, plan, global_level, step_level)`` — the last is
+        the level this step actually decodes at, which the provenance
+        ledger records per token range."""
         if not self._adaptive:
-            return None, None, None
+            return None, None, None, None
         if self._scheduler is None:
-            return None, self._plan, (self._controller.level
-                                      if self._controller else None)
+            lvl = self._controller.level if self._controller else None
+            return None, self._plan, lvl, lvl
         sch = self._scheduler
         glevel = (self._controller.level if self._controller is not None
                   else sch.top_level)
@@ -956,7 +1045,7 @@ class ContinuousServingEngine(ServingEngine):
             self._device_stacks[level] = luts
         plan = sch.ladder.plan(level)
         self.telemetry.register_plan(plan)
-        return luts, plan, glevel
+        return luts, plan, glevel, level
 
     def step_once(self, now: float | None = None) -> bool:
         """Admit what fits, then run one decode step over the pool.
@@ -983,7 +1072,7 @@ class ContinuousServingEngine(ServingEngine):
                                                    self.table_entries)
 
         classes = sorted({seq.cls for _, seq in occupied})
-        luts, plan_b, glevel = self._resolve_stack(classes)
+        luts, plan_b, glevel, step_level = self._resolve_stack(classes)
         if self._adaptive and luts is None:
             luts, plan_b = self._luts, self._plan
 
@@ -1035,12 +1124,27 @@ class ContinuousServingEngine(ServingEngine):
             generated, first = seq.advance(int(sampled[idx]))
             if generated:
                 row["decode_tokens"] += 1
+                if self._provenance is not None:
+                    self._prov_extend(seq, len(seq.generated) - 1,
+                                      plan_b if self._adaptive else None,
+                                      step_level)
+                    if drift is not None:
+                        self._prov_open[seq.rid]["drift"].append(
+                            round(drift, 6))
             else:
                 row["prefill_tokens"] += 1
             if first:
+                seq.first_token_t = t_done
                 self.telemetry.record_ttft(
                     seq.cls if self._scheduler is not None else None,
                     t_done - seq.submitted_t)
+                self._req_event(
+                    "req.decode", rid=seq.rid, cls=seq.cls,
+                    ttft_ms=round(1e3 * (t_done - seq.submitted_t), 3),
+                    prefill_ms=round(
+                        1e3 * max(0.0, (t_done - seq.admitted_t)
+                                  - seq.suspended_before_first_s), 3)
+                    if seq.admitted_t is not None else None)
             if seq.done:
                 self._pool.evict(idx)
                 self._alloc.free(seq.rid)
@@ -1049,6 +1153,15 @@ class ContinuousServingEngine(ServingEngine):
                 self.last_tokens = gen[None, :]
                 self.telemetry.record_request_done(
                     seq.cls if self._scheduler is not None else None)
+                b = seq.breakdown(t_done)
+                self._req_event("req.done", rid=seq.rid, cls=seq.cls,
+                                steps=seq.pos, preempts=seq.preempted,
+                                resumes=seq.preempted, **b)
+                if self._provenance is not None:
+                    self._prov_close(seq.rid)
+                    self._provenance.record_done(
+                        rid=seq.rid, cls=seq.cls, gen_len=len(gen),
+                        steps=seq.pos, preempts=seq.preempted)
 
         backlog = self._queues.depth
         occ = self._pool.occupancy

@@ -96,6 +96,10 @@ class ReplicaRouter:
     # ----------------------------------------------------------------- serve
     def start(self, *, log: Callable[[str], None] | None = None) -> None:
         for r in self.replicas:
+            # stamp before start(): every req.* lifecycle event a replica
+            # emits names the engine that served the request, so merged
+            # timelines stay attributable in a multi-replica trace
+            r.engine.replica_name = r.name
             r.engine.start(telemetry=r.telemetry, controller=r.controller,
                            scheduler=r.scheduler, online=r.online,
                            health=r.health, log=log)

@@ -55,6 +55,15 @@ class SeqState:
     ring_rows: dict | None = None   # per-layer ring-buffer snapshot while
     #                                 suspended (paged layers need none:
     #                                 their KV lives in the request's pages)
+    # lifecycle timestamps (engine clock): the request-timeline breakdown
+    # is computed host-side from these and emitted on req.done, so a
+    # chain is auditable even when the trace clock is injected
+    admitted_t: float | None = None     # first admission into a slot
+    first_token_t: float | None = None  # the TTFT edge
+    queue_wait_s: float = 0.0           # submission -> first admission
+    suspended_at: float | None = None   # eviction time while preempted
+    suspended_s: float = 0.0            # total suspension so far
+    suspended_before_first_s: float = 0.0   # suspension during prefill
 
     @property
     def n_tokens(self) -> int:
@@ -82,6 +91,25 @@ class SeqState:
             first = False
         self.pos += 1
         return generates, first
+
+    def breakdown(self, done_t: float) -> dict:
+        """The lifecycle time breakdown ``req.done`` carries: queueing,
+        prefill (suspension excluded), decode (suspension excluded), and
+        total suspension, in ms.  The four segments sum to ``total_ms``
+        by construction."""
+        ft = self.first_token_t if self.first_token_t is not None else done_t
+        at = self.admitted_t if self.admitted_t is not None else ft
+        susp_decode = self.suspended_s - self.suspended_before_first_s
+        return {
+            "queue_ms": round(1e3 * self.queue_wait_s, 3),
+            "prefill_ms": round(
+                1e3 * max(0.0, (ft - at) - self.suspended_before_first_s),
+                3),
+            "decode_ms": round(1e3 * max(0.0, (done_t - ft) - susp_decode),
+                               3),
+            "suspension_ms": round(1e3 * self.suspended_s, 3),
+            "total_ms": round(1e3 * (done_t - self.submitted_t), 3),
+        }
 
 
 class SlotPool:

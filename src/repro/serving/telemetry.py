@@ -28,7 +28,7 @@ from ..obs.export import write_bench_json
 from ..obs.metrics import LATENCY_MS_BUCKETS, MetricRegistry
 
 __all__ = ["Telemetry", "ALL_CLASSES", "TOK_S_BUCKETS", "DRIFT_BUCKETS",
-           "TTFT_MS_BUCKETS"]
+           "TTFT_MS_BUCKETS", "WAIT_MS_BUCKETS"]
 
 # the label the whole-run aggregate rides under; per-QoS-class rows appear
 # next to it as classes are actually served (a single-tier serve stays
@@ -43,6 +43,9 @@ DRIFT_BUCKETS = (1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 0.01, 0.025, 0.05,
 # decades above per-step latency
 TTFT_MS_BUCKETS = (1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
                    1000.0, 2500.0, 5000.0, 10_000.0, 30_000.0, 60_000.0)
+# queueing delay and preemption-induced suspension share the TTFT scale
+# but need sub-ms resolution: a healthy pool admits in microseconds
+WAIT_MS_BUCKETS = (0.01, 0.05, 0.1, 0.5) + TTFT_MS_BUCKETS
 
 
 class Telemetry:
@@ -227,13 +230,26 @@ class Telemetry:
 
     def record_queue(self, qos_class: str | None, depth: int,
                      wait_s=()) -> None:
-        """Queue health at batch-composition time: current depth (gauge)
-        plus each drained request's time-in-queue (histogram)."""
+        """Queue health at admission time: current depth (gauge) plus
+        each drained request's time-in-queue — both the legacy seconds
+        histogram and a per-class queueing-delay ms histogram on SLO-
+        scale buckets (the Prometheus series request timelines read)."""
         cls = qos_class if qos_class is not None else ALL_CLASSES
         self.registry.gauge("serve_queue_depth",
                             **{"class": cls}).set(depth)
         for w in wait_s:
             self._observe("serve_queue_wait_s", qos_class, float(w), None)
+            self._observe("serve_queue_delay_ms", qos_class,
+                          1e3 * float(w), WAIT_MS_BUCKETS)
+
+    def record_suspension(self, qos_class: str | None,
+                          suspended_s: float) -> None:
+        """One preempted request resumed after ``suspended_s`` out of a
+        slot — the per-class suspension-time histogram, charged (like
+        the preemption counter) to the victim's class."""
+        self._count("serve_resumes_total", qos_class, 1)
+        self._observe("serve_suspension_ms", qos_class,
+                      1e3 * float(suspended_s), WAIT_MS_BUCKETS)
 
     # ------------------------------------------------------------------- read
     @property

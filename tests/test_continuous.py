@@ -393,7 +393,7 @@ def _slo_stack(ladder, spec="gold:1e9@250ms,batch:1e9"):
     return book, scheduler, controller
 
 
-def _preemption_run(cfg, params, compiled, exact_area, ladder):
+def _preemption_run(cfg, params, compiled, exact_area, ladder, health=None):
     _, scheduler, controller = _slo_stack(ladder)
     prof = _profile(kind="spike", ticks=6, per_tick=5, gen_len=12,
                     class_mix=(("gold", 0.4), ("batch", 0.6)),
@@ -402,7 +402,8 @@ def _preemption_run(cfg, params, compiled, exact_area, ladder):
         cfg, params, max_slots=2, prompt_len=8, gen_len=12, page_size=4,
         plan=ladder.plan(0), compiled=compiled, exact_area=exact_area)
     tel = eng.serve(prof, controller=controller, scheduler=scheduler,
-                    telemetry=Telemetry(), seed=1, steps_per_tick=5)
+                    telemetry=Telemetry(), seed=1, steps_per_tick=5,
+                    health=health)
     preempted = [(e["step"], e["preempted_rid"]) for e in tel.events
                  if "preempted_rid" in e]
     return eng, tel, prof, preempted
@@ -459,6 +460,140 @@ def test_preempted_request_resumes_uncorrupted(approx_setup):
         assert np.array_equal(tight.completions[rid],
                               roomy.completions[rid]), (
             f"request {rid} corrupted by preemption/resume")
+
+
+def test_request_lifecycle_and_provenance_e2e(tmp_path, approx_setup):
+    """The tentpole e2e: a traced preemption run reconstructs a complete
+    causal chain (queued -> admitted -> prefill -> decode -> preempt ->
+    resume -> done) for EVERY request, with a breakdown that sums to the
+    total, a gap-free provenance ledger, and both CLI gates passing — all
+    while the decode step still traces exactly once."""
+    from repro.obs import trace as obs_trace
+    from repro.obs.__main__ import main as obs_main
+    from repro.obs.provenance import _ledgers, audit, read_ledger
+    from repro.obs.requests import BREAKDOWN_KEYS, build_timelines
+    from repro.obs.trace import read_trace
+
+    _, _, compiled, exact_area, cfg, params, ladder = approx_setup
+    trace_dir = tmp_path / "trace"
+    obs_trace.configure(trace_dir, process_tag="serve")
+    try:
+        eng, tel, prof, preempted = _preemption_run(cfg, params, compiled,
+                                                    exact_area, ladder)
+    finally:
+        obs_trace.reset()
+        _ledgers.clear()
+    assert preempted, "run never preempted; lifecycle e2e is vacuous"
+    assert eng.trace_count == 1, "lifecycle tracing retraced the step"
+
+    tls = build_timelines(read_trace(trace_dir))
+    assert len(tls) == prof.total_requests
+    broken = {t.rid: t.problems for t in tls.values() if not t.complete}
+    assert not broken, f"broken lifecycle chains: {broken}"
+    resumed = [t for t in tls.values() if t.preempts > 0]
+    assert resumed, "no preempted-and-resumed request completed a chain"
+    for t in tls.values():
+        assert set(t.breakdown) == set(BREAKDOWN_KEYS)
+        assert t.steps is not None and t.steps >= prof.gen_len
+        assert t.total_ms is not None and t.total_ms > 0
+    assert any(t.breakdown["suspension_ms"] > 0 for t in resumed), \
+        "resumed requests recorded no suspension time"
+
+    # ledger: every completed request's ranges tile [0, gen_len) and the
+    # drift samples the engine measured were attributed to ranges
+    rep = audit(read_ledger(trace_dir))
+    assert rep["n_done"] == prof.total_requests
+    assert rep["n_failed"] == 0
+    assert rep["n_complete"] == prof.total_requests
+    assert all(r["tokens_covered"] == prof.gen_len
+               for r in rep["requests"].values())
+    assert sum(r["drift_samples"] for r in rep["requests"].values()) > 0
+    # resumed requests still tile their ledger (the victim pick prefers
+    # the youngest slot, so preemption usually lands mid-prefill and the
+    # decode window stays one contiguous range — a mid-decode preempt
+    # would seal and split, which the unit audit tests pin down)
+    for t in resumed:
+        assert rep["requests"][t.rid]["complete"], rep["requests"][t.rid]
+
+    # both CI gates pass against the real artifacts
+    assert obs_main(["requests", "--trace", str(trace_dir),
+                     "--require-complete"]) == 0
+    assert obs_main(["provenance", "--trace", str(trace_dir)]) == 0
+
+    # per-class queueing-delay and suspension histograms rode telemetry
+    reg = tel.registry
+    assert reg.find("serve_queue_delay_ms", **{"class": "gold"}).count > 0
+    assert reg.find("serve_suspension_ms", **{"class": "_all"}).count \
+        == len(preempted)
+
+
+def test_resume_mirrors_into_health_event_log(approx_setup):
+    """Satellite of the lifecycle work: every resume is a *control*
+    event — it lands in the health plane's attribution log (paired with
+    the preempt that caused it), so an anomaly right after a resume
+    pins to the resume instead of a stale earlier swap."""
+    class _StubHealth:
+        def __init__(self):
+            self.noted = []
+
+        def observe_step(self, **kw):
+            return {"state": "ok"}
+
+        def note_event(self, name, **kw):
+            self.noted.append((name, kw))
+
+        def record_crash(self, e):
+            pass
+
+    _, _, compiled, exact_area, cfg, params, ladder = approx_setup
+    hp = _StubHealth()
+    _, _, _, preempted = _preemption_run(cfg, params, compiled, exact_area,
+                                         ladder, health=hp)
+    assert preempted
+    resumes = [kw for name, kw in hp.noted if name == "serve.resume"]
+    assert len(resumes) == len(preempted), \
+        "every preempted request that came back must note serve.resume"
+    assert all("rid" in kw and "cls" in kw and "step" in kw
+               for kw in resumes)
+    preempt_rids = sorted(rid for _, rid in preempted)
+    assert sorted(kw["rid"] for kw in resumes) == preempt_rids
+
+
+def test_prov_range_seals_on_plan_change_and_preempt(tmp_path):
+    """The engine's range bookkeeping, driven directly: contiguous same-
+    plan tokens extend one range; a plan change or a preemption seals it;
+    the resumed tail still tiles [0, gen_len) for the audit."""
+    from repro.obs.provenance import ProvenanceLedger, audit, read_ledger
+
+    class _Plan:
+        def __init__(self, pid):
+            self.plan_id, self.choices = pid, []
+
+    eng = ContinuousServingEngine.__new__(ContinuousServingEngine)
+    eng._provenance = ProvenanceLedger(tmp_path, tag="w")
+    eng._prov_open = {}
+    eng._width_map = None
+    seq = SeqState(rid=1, cls="gold", prompt=np.array([1, 2], np.int32),
+                   gen_len=6, submitted_t=0.0)
+    p0, p1 = _Plan("p0"), _Plan("p1")
+    eng._prov_extend(seq, 0, p0, 0)
+    eng._prov_extend(seq, 1, p0, 0)     # contiguous same-plan: extends
+    eng._prov_extend(seq, 2, p1, 1)     # plan change: seals [0, 2)
+    eng._prov_close(1)                  # preemption: seals [2, 3)
+    eng._prov_extend(seq, 3, p1, 1)     # resume reopens
+    eng._prov_extend(seq, 4, p1, 1)
+    eng._prov_extend(seq, 5, p1, 1)
+    eng._prov_close(1)
+    eng._provenance.record_done(rid=1, cls="gold", gen_len=6, steps=7,
+                                preempts=1)
+    eng._provenance.close()
+
+    rep = audit(read_ledger(tmp_path))
+    req = rep["requests"][1]
+    assert req["complete"], req["problems"]
+    assert [(r["t0"], r["t1"], r["plan"], r["level"])
+            for r in req["ranges"]] \
+        == [(0, 2, "p0", 0), (2, 3, "p1", 1), (3, 6, "p1", 1)]
 
 
 # --------------------------------------------------------------------------

@@ -177,6 +177,24 @@ def test_anomaly_plane_attributes_to_nearest_event():
     assert plane.to_doc()["by_signal"] == {"ms": 1}
 
 
+def test_anomaly_attributes_to_resume_event():
+    """``serve.resume`` is a first-class control event: a latency spike
+    right after a preempted request re-enters its slot pins to the
+    resume, not to some stale earlier swap."""
+    plane = AnomalyPlane(configs={"ms": DET})
+    plane.note_event("serve.swap", 2, "ev-swap", reason="early")
+    for i in range(20):
+        if i == 19:
+            plane.note_event("serve.resume", 19, "ev-res", rid=7,
+                             cls="batch")
+        assert plane.observe("ms", 1.0, i) is None
+    fired = plane.observe("ms", 9.0, 20)
+    assert fired is not None
+    assert fired.cause.name == "serve.resume"
+    assert fired.cause.event_id == "ev-res"
+    assert fired.cause.attrs == {"rid": 7, "cls": "batch"}
+
+
 def test_anomaly_without_recent_event_has_no_cause():
     plane = AnomalyPlane(configs={"ms": DET})
     for i in range(20):

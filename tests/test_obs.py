@@ -174,6 +174,38 @@ def test_trace_merge_is_idempotent_and_skips_torn_lines(tmp_path):
     assert read_trace(tmp_path) == spans
 
 
+def test_trace_merge_spans_rotated_segments_across_tags(tmp_path):
+    """Two writers (a router's engines, a fleet's workers) rotating into
+    one trace dir: the merge unions every active AND rotated segment of
+    every tag, stays deduped under re-copied rotated files, and keeps
+    the global (t0, id) order."""
+    clock = _fixed_clock()
+    writers = {name: Tracer(tmp_path, clock=clock, process_tag=name,
+                            max_segment_bytes=256)   # a few lines/segment
+               for name in ("eng-a", "eng-b")}
+    for i in range(30):
+        writers["eng-a" if i % 2 == 0 else "eng-b"].event(
+            "tick", i=i, pad="x" * 32)
+    for tr in writers.values():
+        tr.close()
+
+    # both tags actually rotated — otherwise the test is vacuous
+    for name in writers:
+        rotated = list(tmp_path.glob(f"spans-{name}.*.jsonl"))
+        assert rotated, f"{name} never rotated"
+        assert (tmp_path / f"spans-{name}.jsonl").exists()
+
+    spans = read_trace(tmp_path)
+    assert [s["attrs"]["i"] for s in spans] == list(range(30))
+    assert len({s["id"] for s in spans}) == 30
+
+    # re-copying a rotated segment (backup restore, scp -r twice) must
+    # not double its spans
+    seg = sorted(tmp_path.glob("spans-eng-a.*.jsonl"))[0]
+    (tmp_path / "spans-eng-a-restored.jsonl").write_text(seg.read_text())
+    assert read_trace(tmp_path) == spans
+
+
 def test_global_tracer_configure_and_noop(tmp_path):
     # unconfigured: spans are free no-ops, handles still accept set()
     assert not obs_trace.tracing_enabled()

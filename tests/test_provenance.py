@@ -1,0 +1,332 @@
+"""Request-lifecycle timelines + the approximation-provenance ledger.
+
+Unit coverage for the two new obs modules — ledger write/read/audit
+semantics, chain reconstruction and completeness validation from
+synthetic span streams — plus the ``requests`` / ``provenance`` CLI
+subcommands and the lifecycle-event overhead bound.  The traced serving
+e2e (real preemption, real ledger) lives in ``tests/test_continuous.py``.
+"""
+
+import json
+import time
+
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import provenance as obs_prov
+from repro.obs import trace as obs_trace
+from repro.obs.__main__ import main as obs_main
+from repro.obs.metrics import MetricRegistry
+from repro.obs.provenance import (ProvenanceLedger, audit, ledger_for,
+                                  read_ledger)
+from repro.obs.requests import (BREAKDOWN_KEYS, build_timelines,
+                                critical_path, request_events)
+from repro.obs.trace import Tracer, read_trace
+
+
+@pytest.fixture(autouse=True)
+def _isolate_obs_globals():
+    obs_trace.reset()
+    prev = obs_metrics.set_registry(MetricRegistry())
+    obs_prov._ledgers.clear()
+    yield
+    obs_trace.reset()
+    obs_metrics.set_registry(prev)
+    obs_prov._ledgers.clear()
+
+
+def _clock():
+    t = [0.0]
+
+    def tick():
+        t[0] += 1.0
+        return t[0]
+
+    return tick
+
+
+# ---------------------------------------------------------------------------
+# ledger: write / read / dedup
+# ---------------------------------------------------------------------------
+def test_ledger_roundtrip_dedup_and_torn_lines(tmp_path):
+    led = ProvenanceLedger(tmp_path, tag="w0", clock=_clock())
+    led.note_plan("p0", ["exact", "mul2_t1"], width_map=(8, 8))
+    led.note_plan("p0", ["exact", "mul2_t1"])   # dup: written once
+    led.record_range(rid=1, cls="gold", t0=0, t1=4, plan="p0", level=1,
+                     drift=[0.01, 0.02])
+    led.record_done(rid=1, cls="gold", gen_len=4, steps=7, preempts=0)
+    led.close()
+
+    recs = read_ledger(tmp_path)
+    assert [r["k"] for r in recs] == ["plan", "range", "done"]
+    assert recs[0]["width_map"] == [8, 8]
+    # a re-copied file (same writer/seq) and a torn tail change nothing
+    src = tmp_path / "prov-w0.jsonl"
+    (tmp_path / "prov-w0-copy.jsonl").write_text(src.read_text())
+    with open(src, "a") as f:
+        f.write('{"k": "range", "w": "w0"')
+    assert read_ledger(tmp_path) == recs
+
+
+def test_ledger_for_is_shared_per_root_and_tag(tmp_path):
+    a = ledger_for(tmp_path, "t")
+    b = ledger_for(tmp_path, "t")
+    assert a is b, "router replicas must share one sequence counter"
+    assert ledger_for(tmp_path, "other") is not a
+    a.record_done(rid=1, cls="std", gen_len=2, steps=3, preempts=0)
+    b.record_done(rid=2, cls="std", gen_len=2, steps=3, preempts=0)
+    recs = read_ledger(tmp_path)
+    assert [r["n"] for r in recs] == [0, 1], "shared writer reused a seq"
+
+
+# ---------------------------------------------------------------------------
+# audit semantics
+# ---------------------------------------------------------------------------
+def _ledger(tmp_path, *records):
+    led = ProvenanceLedger(tmp_path, tag="w0", clock=_clock())
+    for kind, kw in records:
+        getattr(led, kind)(**kw)
+    led.close()
+    return read_ledger(tmp_path)
+
+
+def test_audit_gap_free_cover_is_complete(tmp_path):
+    recs = _ledger(
+        tmp_path,
+        ("note_plan", dict(plan_id="p0", layers=["exact"])),
+        ("note_plan", dict(plan_id="p1", layers=["mul2_t1"])),
+        ("record_range", dict(rid=1, cls="gold", t0=0, t1=3, plan="p0",
+                              level=0, drift=[0.01])),
+        ("record_range", dict(rid=1, cls="gold", t0=3, t1=8, plan="p1",
+                              level=2, drift=[0.03, 0.05])),
+        ("record_done", dict(rid=1, cls="gold", gen_len=8, steps=11,
+                             preempts=1)),
+    )
+    rep = audit(recs)
+    assert rep["n_done"] == rep["n_complete"] == 1 and not rep["n_failed"]
+    req = rep["requests"][1]
+    assert req["complete"] and not req["problems"]
+    assert req["tokens_covered"] == 8 and req["preempts"] == 1
+    assert [r["plan"] for r in req["ranges"]] == ["p0", "p1"]
+    assert req["drift_samples"] == 3
+    assert req["mean_drift"] == pytest.approx(0.03)
+    assert req["max_drift"] == pytest.approx(0.05)
+
+
+def test_audit_flags_gap_overlap_and_dangling_plan(tmp_path):
+    recs = _ledger(
+        tmp_path,
+        ("record_range", dict(rid=1, cls="gold", t0=0, t1=3, plan="exact",
+                              level=None, drift=[])),
+        ("record_range", dict(rid=1, cls="gold", t0=5, t1=8, plan="ghost",
+                              level=1, drift=[])),    # gap [3,5) + no plan
+        ("record_done", dict(rid=1, cls="gold", gen_len=8, steps=9,
+                             preempts=0)),
+        ("record_range", dict(rid=2, cls="batch", t0=0, t1=4, plan="exact",
+                              level=None, drift=[])),
+        ("record_range", dict(rid=2, cls="batch", t0=2, t1=6, plan="exact",
+                              level=None, drift=[])),  # overlap at 2
+        ("record_done", dict(rid=2, cls="batch", gen_len=6, steps=7,
+                             preempts=0)),
+        ("record_range", dict(rid=3, cls="batch", t0=0, t1=2, plan="exact",
+                              level=None, drift=[])),  # no done: in flight
+    )
+    rep = audit(recs)
+    assert rep["n_done"] == 2 and rep["n_failed"] == 2
+    p1 = rep["requests"][1]["problems"]
+    assert any("gap at tokens [3, 5)" in p for p in p1)
+    assert any("plan ghost has no plan record" in p for p in p1)
+    assert any("overlap at token 2" in p
+               for p in rep["requests"][2]["problems"])
+    # in-flight: reported, never counted as a failure
+    r3 = rep["requests"][3]
+    assert not r3["complete"]
+    assert r3["problems"] == ["no done record (in flight or crashed)"]
+
+
+def test_audit_short_cover_fails_even_without_gap(tmp_path):
+    recs = _ledger(
+        tmp_path,
+        ("record_range", dict(rid=1, cls="std", t0=0, t1=5, plan="exact",
+                              level=None, drift=[])),
+        ("record_done", dict(rid=1, cls="std", gen_len=8, steps=9,
+                             preempts=0)),
+    )
+    rep = audit(recs)
+    assert rep["n_failed"] == 1
+    assert any("cover 5/8 tokens" in p
+               for p in rep["requests"][1]["problems"])
+
+
+# ---------------------------------------------------------------------------
+# timelines from synthetic span chains
+# ---------------------------------------------------------------------------
+def _emit_chain(tr, rid, *, cls="gold", preempts=0, drop=(), replica=""):
+    extra = {"replica": replica} if replica else {}
+    susp = 2.0 * preempts
+    ev = [
+        ("req.queued", dict(rid=rid, cls=cls, prompt_len=4)),
+        ("req.admitted", dict(rid=rid, cls=cls, slot=0, queue_ms=1.0)),
+        ("req.prefill", dict(rid=rid, cls=cls, slot=0, prompt_len=4)),
+        ("req.decode", dict(rid=rid, cls=cls, ttft_ms=5.0, prefill_ms=4.0)),
+    ]
+    for _ in range(preempts):
+        ev.append(("req.preempt", dict(rid=rid, cls=cls, step=3,
+                                       by="gold")))
+        ev.append(("req.resume", dict(rid=rid, cls=cls, slot=1,
+                                      suspended_ms=2.0)))
+    ev.append(("req.done", dict(rid=rid, cls=cls, steps=8,
+                                preempts=preempts, resumes=preempts,
+                                queue_ms=1.0, prefill_ms=4.0,
+                                decode_ms=10.0, suspension_ms=susp,
+                                total_ms=15.0 + susp)))
+    for name, attrs in ev:
+        if name not in drop:
+            tr.event(name, **attrs, **extra)
+
+
+def test_build_timelines_complete_and_broken_chains(tmp_path):
+    tr = Tracer(tmp_path, clock=_clock(), process_tag="w0")
+    _emit_chain(tr, 1, preempts=2, replica="gold-a")
+    _emit_chain(tr, 2, cls="batch")
+    _emit_chain(tr, 3, preempts=1, drop=("req.resume",))   # never resumed
+    tr.event("serve.swap", reason="noise")          # non-lifecycle: ignored
+    tr.close()
+
+    spans = read_trace(tmp_path)
+    assert all("rid" in e["attrs"] for e in request_events(spans))
+    tls = build_timelines(spans)
+    assert set(tls) == {1, 2, 3}
+
+    t1 = tls[1]
+    assert t1.complete and t1.preempts == t1.resumes == 2
+    assert t1.cls == "gold" and t1.replica == "gold-a"
+    assert t1.total_ms == pytest.approx(19.0)
+    assert set(t1.breakdown) == set(BREAKDOWN_KEYS)
+    assert critical_path(t1.breakdown) == "decode_ms"
+    assert tls[2].complete and tls[2].preempts == 0
+
+    t3 = tls[3]
+    assert not t3.complete
+    assert any("0 resume(s)" in p for p in t3.problems)
+
+
+def test_build_timelines_flags_lost_events_and_bad_breakdown(tmp_path):
+    tr = Tracer(tmp_path, clock=_clock(), process_tag="w0")
+    _emit_chain(tr, 1, drop=("req.admitted",))       # lost admission event
+    _emit_chain(tr, 2, drop=("req.done",))           # still in flight
+    tr.event("req.queued", rid=3, cls="std", prompt_len=2)
+    tr.event("req.admitted", rid=3, cls="std", slot=0, queue_ms=1.0)
+    tr.event("req.prefill", rid=3, cls="std", slot=0, prompt_len=2)
+    tr.event("req.decode", rid=3, cls="std", ttft_ms=3.0)
+    tr.event("req.done", rid=3, cls="std", steps=4, preempts=0, resumes=0,
+             queue_ms=1.0, prefill_ms=-2.0, decode_ms=9.0,
+             suspension_ms=0.0, total_ms=99.0)   # negative + bad sum
+    tr.close()
+
+    tls = build_timelines(read_trace(tmp_path))
+    assert any("0x req.admitted" in p for p in tls[1].problems)
+    assert any("0x req.done" in p for p in tls[2].problems)
+    p3 = tls[3].problems
+    assert any("negative prefill_ms" in p for p in p3)
+    assert not any("sums to" in p for p in p3), \
+        "sum check must not fire on an already-incomplete breakdown"
+
+    tr2 = Tracer(tmp_path / "b", clock=_clock(), process_tag="w0")
+    _emit_chain(tr2, 4)
+    tr2.close()
+    spans = read_trace(tmp_path / "b")
+    for s in spans:
+        if s["name"] == "req.done":
+            s["attrs"]["total_ms"] = 40.0    # breakdown says 15
+    tls = build_timelines(spans)
+    assert any("sums to" in p for p in tls[4].problems)
+
+
+# ---------------------------------------------------------------------------
+# CLI: requests + provenance subcommands
+# ---------------------------------------------------------------------------
+def test_cli_requests_gate_and_json(tmp_path, capsys):
+    tr = Tracer(tmp_path, clock=_clock(), process_tag="w0")
+    _emit_chain(tr, 1, preempts=1)
+    _emit_chain(tr, 2, cls="batch")
+    tr.close()
+
+    assert obs_main(["requests", "--trace", str(tmp_path),
+                     "--require-complete"]) == 0
+    out = capsys.readouterr().out
+    assert "2 request(s)" in out and "2 complete chain(s)" in out
+
+    assert obs_main(["requests", "--trace", str(tmp_path), "--json",
+                     "--rid", "1"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["n_requests"] == 1 and doc["n_complete"] == 1
+    req = doc["requests"][0]
+    assert req["rid"] == 1 and req["preempts"] == 1
+    assert req["critical_path"] == "decode_ms"
+    assert req["events"][0] == "req.queued"
+    assert req["events"][-1] == "req.done"
+
+    # a broken chain fails the gate with exit 1
+    tr2 = Tracer(tmp_path, clock=_clock(), process_tag="w1")
+    _emit_chain(tr2, 9, preempts=1, drop=("req.resume",))
+    tr2.close()
+    assert obs_main(["requests", "--trace", str(tmp_path),
+                     "--require-complete"]) == 1
+    assert "broken lifecycle" in capsys.readouterr().err
+
+    # no lifecycle events at all: exit 2 (missing input, not a failure)
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert obs_main(["requests", "--trace", str(empty)]) == 2
+
+
+def test_cli_provenance_gate_and_json(tmp_path, capsys):
+    _ledger(
+        tmp_path,
+        ("note_plan", dict(plan_id="p0", layers=["mul2_t1"])),
+        ("record_range", dict(rid=1, cls="gold", t0=0, t1=6, plan="p0",
+                              level=1, drift=[0.02])),
+        ("record_done", dict(rid=1, cls="gold", gen_len=6, steps=9,
+                             preempts=0)),
+    )
+    assert obs_main(["provenance", "--trace", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "1 with gap-free provenance" in out
+
+    assert obs_main(["provenance", "--trace", str(tmp_path),
+                     "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["n_complete"] == 1 and doc["n_failed"] == 0
+    assert doc["plans"]["p0"]["layers"] == ["mul2_t1"]
+
+    # a gapped request fails the audit with exit 1
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    _ledger(
+        bad,
+        ("record_range", dict(rid=1, cls="std", t0=2, t1=4, plan="exact",
+                              level=None, drift=[])),
+        ("record_done", dict(rid=1, cls="std", gen_len=4, steps=5,
+                             preempts=0)),
+    )
+    assert obs_main(["provenance", "--trace", str(bad)]) == 1
+    assert "without" in capsys.readouterr().err
+
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert obs_main(["provenance", "--trace", str(empty)]) == 2
+
+
+# ---------------------------------------------------------------------------
+# overhead: lifecycle events must be near-free when tracing is off
+# ---------------------------------------------------------------------------
+def test_lifecycle_event_overhead_is_negligible_when_off():
+    # the engine emits a handful of req.* events per request through
+    # trace_event; with tracing unconfigured each call must stay far
+    # below the CI budget (<=2% of a multi-ms decode step)
+    t0 = time.perf_counter()
+    for i in range(2000):
+        obs_trace.event("req.queued", rid=i, cls="gold", prompt_len=8)
+    per_call_ms = 1e3 * (time.perf_counter() - t0) / 2000
+    assert per_call_ms < 0.05, f"untraced req event {per_call_ms:.4f} ms"
