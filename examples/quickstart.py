@@ -209,6 +209,45 @@ ledger and exits 1 when any completed request has a gap, overlap, or
 dangling plan reference.  Per-class queueing-delay and suspension-time
 histograms (``serve_queue_delay_ms``, ``serve_suspension_ms``) ride the
 same trace dir into ``repro.obs prom``.
+
+Cost accounting & live metrics
+------------------------------
+The cost plane turns the ledger into the paper's dividend, attributed
+per request: the model config gives exact MLP MACs per token per layer,
+each sealed token range names the plan that decoded it, and each plan
+record prices its per-layer operators as an ``[area_lo, area_hi]``
+bracket (composed W8 operators carry their glue adders in the upper
+bound, so the guaranteed saving uses ``area_hi`` and the optimistic one
+``area_lo``).  The attribution is reconciled, not sampled — a completed
+request's attributed MACs must tile ``[0, gen_len)`` times the layer
+dims exactly, and any gap is an audit failure::
+
+    python -m repro.obs costs --trace runs/trace --require-reconciled
+    python -m repro.obs costs --trace runs/trace --json   # machine form
+
+The same numbers stream live while a serve runs: ``--metrics-port 0``
+(or a fixed port) answers ``GET /metrics`` with the merged Prometheus
+registries — ``approx_macs_total{class=...}`` and
+``area_mac_saved_total{class=...,layer=...}`` tick per decode step —
+plus ``/healthz`` (health-plane state as the HTTP status: ok=200,
+warn=429, page=503) and ``/costs.json`` (the full reconciled report)::
+
+    python -m repro.launch.serve --reduced --continuous --library runs/lib \
+        --qos-class "gold:0.02@8ms,batch:0.5" --trace runs/trace \
+        --health --metrics-port 0 --bench-json BENCH_costs.json &
+    curl -s http://127.0.0.1:$PORT/metrics | grep area_mac_saved_total
+    curl -s http://127.0.0.1:$PORT/healthz
+
+For timeline debugging in a real viewer, export the span stream as
+Chrome trace-event JSON — nesting and parentage preserved — and load it
+at https://ui.perfetto.dev or ``chrome://tracing``::
+
+    python -m repro.obs export --trace runs/trace --format chrome \
+        --out runs/trace-chrome.json
+
+Every trace-reading subcommand (``summary``, ``slowest``, ``requests``,
+``provenance``, ``costs``, ``export``) answers a missing or empty trace
+dir with one line (``no trace at <dir>``) and exit code 2.
 """
 
 import numpy as np

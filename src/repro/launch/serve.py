@@ -230,6 +230,12 @@ def main() -> None:
                          "spans + a metric snapshot land there; point it at "
                          "a fleet run's trace dir for one merged view "
                          "(python -m repro.obs summary --trace DIR)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve live GET /metrics (Prometheus text), "
+                         "/healthz (health state as HTTP status) and "
+                         "/costs.json (cost-dividend attribution; needs "
+                         "--trace) on 127.0.0.1:PORT for the duration of "
+                         "the serve; 0 picks a free port")
     ap.add_argument("--health", action="store_true",
                     help="run the SLO health plane: multi-window burn-rate "
                          "monitors over the declared --qos-class SLOs and "
@@ -489,6 +495,40 @@ def main() -> None:
         router = None
         fixed_row = None
         health = None
+        mserver = None
+
+        def start_metrics(telemetries, health_obj=None, replicas=None):
+            """Live scrape endpoint over the registries the serve is about
+            to write into — the same snapshots the --trace dump merges at
+            exit, read fresh on every GET."""
+            if args.metrics_port is None:
+                return None
+            from ..obs.httpd import MetricsServer
+
+            providers = [get_registry().snapshot]
+            providers += [t.registry.snapshot for t in telemetries]
+            if replicas is not None:
+                def health_provider():
+                    reports = {r.name: r.health.report()
+                               for r in replicas if r.health is not None}
+                    if not reports:
+                        return {"state": "ok"}
+                    worst = max(reports, key=lambda n: state_rank(
+                        reports[n]["state"]))
+                    return dict(reports[worst], replica=worst)
+            elif health_obj is not None:
+                health_provider = health_obj.report
+            else:
+                health_provider = None
+            srv = MetricsServer(port=args.metrics_port,
+                                snapshot_providers=providers,
+                                health_provider=health_provider,
+                                trace_dir=args.trace)
+            port = srv.start()
+            print(f"metrics endpoint -> http://127.0.0.1:{port}/metrics "
+                  f"(/healthz, /costs.json)")
+            return srv
+
         if args.continuous:
             max_slots = args.max_slots or args.batch
 
@@ -530,6 +570,8 @@ def main() -> None:
                         scheduler=sc, online=on, classes=aff,
                         health=make_health(f"replica{i}")))
                 router = ReplicaRouter(replicas, watcher=watcher)
+                mserver = start_metrics(
+                    [r.telemetry for r in replicas], replicas=replicas)
                 t0 = time.time()
                 s = router.serve(profile, seed=args.seed,
                                  steps_per_tick=args.steps_per_tick,
@@ -540,11 +582,13 @@ def main() -> None:
             else:
                 engine = make_engine()
                 health = make_health("serve")
+                serve_tel = Telemetry()
+                mserver = start_metrics([serve_tel], health_obj=health)
                 t0 = time.time()
                 telemetry = engine.serve(
                     profile, controller=controller, watcher=watcher,
                     scheduler=scheduler, online=online,
-                    telemetry=Telemetry(), seed=args.seed,
+                    telemetry=serve_tel, seed=args.seed,
                     steps_per_tick=args.steps_per_tick, health=health,
                     log=print)
                 wall = time.time() - t0
@@ -553,10 +597,12 @@ def main() -> None:
                 cfg, params, batch=args.batch, prompt_len=args.prompt_len,
                 gen_len=args.gen_len, warmup_caches=warmup, **common)
             health = make_health("serve")
+            serve_tel = Telemetry()
+            mserver = start_metrics([serve_tel], health_obj=health)
             t0 = time.time()
             telemetry = engine.serve(profile, controller=controller,
                                      watcher=watcher, scheduler=scheduler,
-                                     online=online, telemetry=Telemetry(),
+                                     online=online, telemetry=serve_tel,
                                      seed=args.seed, health=health,
                                      log=print)
             wall = time.time() - t0
@@ -711,6 +757,11 @@ def main() -> None:
                   f"({hr['dumps']} bundle(s); "
                   f"python -m repro.obs postmortem --dir "
                   f"{args.postmortem_dir})")
+    if mserver is not None:
+        # stop before the exit snapshot lands in the trace dir: the live
+        # endpoint merges trace-dir snapshots into every scrape, so
+        # serving past the dump would double-count this process
+        mserver.stop()
     if args.trace:
         # the serve-side metric snapshot joins any fleet-side ones already
         # in the dir: per-batch latency/throughput histograms (telemetry's

@@ -74,6 +74,16 @@ class CompiledLut:
     width-neutral spellings.  ``tile`` holds the 16x16 generator tile of
     a wide multiplier table — the array the two-level Pallas kernel
     actually loads.
+
+    ``area_lo``/``area_hi`` bracket the operator's area at the compiled
+    width (:func:`load_mul_frontier` fills them): the lower bound is the
+    block-count scaling of :func:`repro.precision.compose.compose_blocks`
+    (partial-product glue adders ignored), the upper bound adds a
+    ripple-carry ceiling on that glue
+    (:func:`repro.precision.compose.compose_glue_bits`).  Native
+    uncomposed tables carry a collapsed bracket (``lo == hi``).  The
+    cost plane reports the area·MAC dividend as this bracket, never a
+    point estimate.
     """
 
     lut: np.ndarray          # (side, side) int32 at the target width
@@ -83,6 +93,8 @@ class CompiledLut:
     mae16: float             # mean |err| of the compiled table vs exact
     target_bits: int = NATIVE_BLOCK_BITS
     tile: np.ndarray | None = None   # 16x16 generator (wide mul targets only)
+    area_lo: float | None = None     # composed-area lower bound (µm²)
+    area_hi: float | None = None     # lower bound + glue-adder ceiling
 
     @property
     def wce(self) -> int:
@@ -159,17 +171,26 @@ def load_mul_frontier(
     if target_bits is None:
         bits = max(s.bits for s in sigs)
         frontier = ParetoFrontier.from_store(store, "mul", bits)
-        compiled = [(rec, compile_record(rec)) for rec in frontier.front]
+        compiled = [(rec, dataclasses.replace(compile_record(rec),
+                                              area_lo=rec.area,
+                                              area_hi=rec.area))
+                    for rec in frontier.front]
         exact_area = area(benchmark(f"mul_i{2 * bits}"))
         return compiled, exact_area, bits
 
     width = get_width(target_bits)
+    # glue-adder ceiling: ripple-carry cell area per bit position, taken
+    # from the exact 4-bit benchmark adder (adder_i8 = two 4-bit operands)
+    adder_bit_area = area(benchmark("adder_i8")) / 4.0
     pairs: list[tuple[OperatorRecord, CompiledLut]] = []
     for rec in store.query("mul"):
         comp = compile_record(rec, target_bits=width.bits)
-        scaled = dataclasses.replace(
-            rec, area=rec.area * compose.compose_blocks(rec.signature.bits,
-                                                        width.bits))
+        lo = rec.area * compose.compose_blocks(rec.signature.bits,
+                                               width.bits)
+        hi = lo + adder_bit_area * compose.compose_glue_bits(
+            rec.signature.bits, width.bits)
+        comp = dataclasses.replace(comp, area_lo=lo, area_hi=hi)
+        scaled = dataclasses.replace(rec, area=lo)
         pairs.append((scaled, comp))
     front = pareto_front(pairs, (lambda p: p[0].area,
                                  lambda p: float(p[1].wce16)))

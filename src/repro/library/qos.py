@@ -33,6 +33,7 @@ __all__ = [
     "select_plan",
     "refresh_plan",
     "plan_ladder",
+    "plan_layer_areas",
     "validate_lut_stack",
     "measure_layer_costs",
     "measure_sensitivities",
@@ -90,6 +91,30 @@ class LayerPlan:
         uses it to suppress no-op swaps and label telemetry."""
         blob = ",".join(c.key or "exact" for c in self.choices)
         return hashlib.sha256(blob.encode()).hexdigest()[:10]
+
+
+def plan_layer_areas(plan: LayerPlan,
+                     area_hi_by_key: dict[str, float] | None = None
+                     ) -> list[tuple[float, float]]:
+    """Per-layer ``(area_lo, area_hi)`` bracket for a plan's choices —
+    the pricing the cost plane records into provenance ``plan`` records.
+
+    A choice's own ``area`` is the composed *lower* bound (glue adders
+    ignored, see :func:`repro.precision.compose.compose_blocks`);
+    ``area_hi_by_key`` maps operator keys to their glue-inclusive upper
+    bounds (``CompiledLut.area_hi``).  Exact layers carry the exact
+    baseline on both ends, so ``exact_area - area`` prices to a zero
+    dividend without special-casing.  Keys missing from the map fall
+    back to a collapsed bracket.
+    """
+    out: list[tuple[float, float]] = []
+    for c in plan.choices:
+        if c.key is None:
+            out.append((plan.exact_area, plan.exact_area))
+        else:
+            hi = (area_hi_by_key or {}).get(c.key, c.area)
+            out.append((float(c.area), float(max(c.area, hi))))
+    return out
 
 
 def _cost_matrix(

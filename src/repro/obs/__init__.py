@@ -18,10 +18,20 @@ channels (event rings, end-of-run prints, hand-built bench dicts):
   that dumps atomic post-mortem bundles on breach/anomaly/crash.
 * :mod:`repro.obs.regress` — bench regression sentinel: BENCH_*.json vs
   committed baselines under direction-aware per-metric tolerances.
+* :mod:`repro.obs.provenance` / :mod:`repro.obs.costs` — the
+  approximation-provenance ledger and the cost-accounting plane over it:
+  per-request/class/layer/plan approx-MAC and area·MAC dividend
+  attribution with a hard tiling-reconciliation invariant.
+* :mod:`repro.obs.httpd` — live ``/metrics`` (Prometheus), ``/healthz``
+  and ``/costs.json`` endpoint a ``--metrics-port`` serve answers while
+  running.
+* :mod:`repro.obs.perfetto` — Chrome trace-event export of the span
+  stream for Perfetto / ``chrome://tracing``.
 * ``python -m repro.obs`` — summarize/filter a trace dir (slowest spans,
   per-engine fleet wall-time, per-class latency tables), gate on health
   (``health``), read post-mortems (``postmortem``), diff benches
-  (``diff``).
+  (``diff``), audit provenance (``provenance``), attribute the dividend
+  (``costs``), export for external viewers (``export``).
 
 Stdlib-only: importable before jax, numpy or z3 enter the process.
 """
@@ -67,6 +77,10 @@ from .health import (
 )
 from .flight import FlightRecorder, read_postmortems
 from .regress import Rule, compare_bench, flatten, load_rules
+from .provenance import ProvenanceLedger, audit, ledger_for, read_ledger
+from .costs import cost_report, mlp_macs_per_layer, plan_cost_row
+from .httpd import MetricsServer
+from .perfetto import chrome_trace, export_chrome
 
 __all__ = [
     "Counter",
@@ -104,4 +118,14 @@ __all__ = [
     "compare_bench",
     "flatten",
     "load_rules",
+    "ProvenanceLedger",
+    "audit",
+    "ledger_for",
+    "read_ledger",
+    "cost_report",
+    "mlp_macs_per_layer",
+    "plan_cost_row",
+    "MetricsServer",
+    "chrome_trace",
+    "export_chrome",
 ]

@@ -27,6 +27,16 @@ read post-mortems, and diff bench runs.
   ledger (``prov-*.jsonl``): which plan decoded which token ranges,
   with drift stats; exits 1 when any completed request has a gap,
   overlap, or dangling plan reference.
+* ``costs --trace <dir>`` — the cost-accounting report: per-request /
+  per-class / per-layer approx-MAC and area·MAC dividend attribution
+  joined from the ledger; ``--require-reconciled`` exits 1 unless every
+  attributed MAC tiles its request exactly (the costs-smoke CI gate).
+* ``export --trace <dir> --format chrome [--out f.json]`` — convert the
+  merged span trace to Chrome trace-event JSON for Perfetto /
+  ``chrome://tracing``.
+
+Every trace-reading command exits 2 with ``no trace at <dir>`` when the
+directory is absent or holds no trace artifacts at all.
 """
 
 from __future__ import annotations
@@ -36,10 +46,12 @@ import json
 import sys
 from pathlib import Path
 
+from .costs import cost_report, render_report
 from .export import METRICS_GLOB, prometheus_text, read_metrics
 from .flight import read_postmortems
 from .health import STATES, state_rank
 from .metrics import Histogram, MetricRegistry
+from .perfetto import export_chrome
 from .provenance import audit, read_ledger
 from .regress import compare_bench, load_rules, record_history
 from .requests import build_timelines, critical_path
@@ -52,7 +64,23 @@ DECODE_TOK_S_METRIC = "serve_decode_tok_s"
 ALL_CLASSES = "_all"   # the label the whole-run aggregate rides under
 
 COMMANDS = ("summary", "slowest", "prom", "health", "postmortem", "diff",
-            "requests", "provenance")
+            "requests", "provenance", "costs", "export")
+
+
+def _trace_missing(trace_dir: Path) -> bool:
+    """True when there is nothing to inspect: the dir is absent or holds
+    none of the trace artifact families (spans, metric snapshots,
+    provenance ledger)."""
+    if not trace_dir.is_dir():
+        return True
+    return not any(
+        any(trace_dir.glob(pattern))
+        for pattern in ("spans-*.jsonl", METRICS_GLOB, "prov-*.jsonl"))
+
+
+def _no_trace(trace_dir: Path) -> int:
+    print(f"no trace at {trace_dir}", file=sys.stderr)
+    return 2
 
 
 def _fmt(v, width: int = 9, prec: int = 3) -> str:
@@ -185,9 +213,8 @@ def summary_doc(trace_dir: Path, *, limit: int = 5) -> dict:
 # ---------------------------------------------------------------------------
 def cmd_summary(args) -> int:
     trace_dir = Path(args.trace)
-    if not trace_dir.is_dir():
-        print(f"no such trace dir: {trace_dir}", file=sys.stderr)
-        return 2
+    if _trace_missing(trace_dir):
+        return _no_trace(trace_dir)
     if args.json:
         doc = summary_doc(trace_dir, limit=args.limit)
         print(json.dumps(doc, indent=1, sort_keys=True))
@@ -222,9 +249,8 @@ def cmd_summary(args) -> int:
 
 def cmd_slowest(args) -> int:
     trace_dir = Path(args.trace)
-    if not trace_dir.is_dir():
-        print(f"no such trace dir: {trace_dir}", file=sys.stderr)
-        return 2
+    if _trace_missing(trace_dir):
+        return _no_trace(trace_dir)
     spans = read_trace(trace_dir)
     if args.name:
         spans = [s for s in spans if args.name in s["name"]]
@@ -358,9 +384,8 @@ def cmd_diff(args) -> int:
 def cmd_requests(args) -> int:
     """Per-request lifecycle timelines from the ``req.*`` trace chains."""
     trace_dir = Path(args.trace)
-    if not trace_dir.is_dir():
-        print(f"no such trace dir: {trace_dir}", file=sys.stderr)
-        return 2
+    if _trace_missing(trace_dir):
+        return _no_trace(trace_dir)
     timelines = build_timelines(read_trace(trace_dir))
     if args.rid is not None:
         timelines = {rid: tl for rid, tl in timelines.items()
@@ -420,9 +445,8 @@ def cmd_requests(args) -> int:
 def cmd_provenance(args) -> int:
     """Audit the approximation-provenance ledger next to the trace."""
     trace_dir = Path(args.trace)
-    if not trace_dir.is_dir():
-        print(f"no such trace dir: {trace_dir}", file=sys.stderr)
-        return 2
+    if _trace_missing(trace_dir):
+        return _no_trace(trace_dir)
     records = read_ledger(trace_dir)
     if not records:
         print(f"no prov-*.jsonl records in {trace_dir} (serve without "
@@ -457,6 +481,48 @@ def cmd_provenance(args) -> int:
         print(f"FAIL: {report['n_failed']} completed request(s) without "
               f"gap-free provenance", file=sys.stderr)
         return 1
+    return 0
+
+
+def cmd_costs(args) -> int:
+    """Cost-accounting report/gate over the provenance ledger."""
+    trace_dir = Path(args.trace)
+    if _trace_missing(trace_dir):
+        return _no_trace(trace_dir)
+    records = read_ledger(trace_dir)
+    if not records:
+        print(f"no prov-*.jsonl records in {trace_dir} (serve without "
+              "--trace, or a non-continuous engine?)", file=sys.stderr)
+        return 2
+    rep = cost_report(records)
+    if args.json:
+        print(json.dumps(rep, indent=1, sort_keys=True))
+    else:
+        print(render_report(rep))
+    if args.require_reconciled and not rep["reconciled"]:
+        print("FAIL: cost attribution did not reconcile — "
+              + "; ".join(rep["problems"] or ["no completed requests"]),
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def cmd_export(args) -> int:
+    """Convert the merged span trace to Chrome trace-event JSON."""
+    trace_dir = Path(args.trace)
+    if _trace_missing(trace_dir):
+        return _no_trace(trace_dir)
+    spans = read_trace(trace_dir)
+    if not spans:
+        print(f"no spans-*.jsonl span records in {trace_dir} (serve "
+              "without --trace?)", file=sys.stderr)
+        return 2
+    doc = export_chrome(spans, args.out)
+    if args.out:
+        print(f"wrote {len(doc['traceEvents'])} trace event(s) "
+              f"({doc['otherData']['spans']} span(s)) to {args.out}")
+    else:
+        print(json.dumps(doc))
     return 0
 
 
@@ -544,6 +610,28 @@ def main(argv: list[str] | None = None) -> int:
                    help="trace directory holding prov-*.jsonl")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=cmd_provenance)
+
+    p = sub.add_parser("costs",
+                       help="per-request area/energy dividend attribution")
+    p.add_argument("--trace", required=True,
+                   help="trace directory holding prov-*.jsonl")
+    p.add_argument("--require-reconciled", action="store_true",
+                   help="exit 1 unless every attributed MAC tiles its "
+                        "request exactly and every plan is priced "
+                        "(CI gate)")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_costs)
+
+    p = sub.add_parser("export",
+                       help="export the span trace for external viewers")
+    p.add_argument("--trace", required=True,
+                   help="trace directory holding spans-*.jsonl")
+    p.add_argument("--format", default="chrome", choices=("chrome",),
+                   help="output format (chrome = Perfetto-loadable "
+                        "trace-event JSON)")
+    p.add_argument("--out", default=None,
+                   help="output file (default: print to stdout)")
+    p.set_defaults(fn=cmd_export)
 
     p = sub.add_parser("diff", help="bench regression sentinel")
     p.add_argument("--bench", nargs="+", required=True,

@@ -13,9 +13,15 @@ measured in that window.
 Three append-only record kinds, one JSON object per line:
 
 * ``plan``  — a plan's identity, written once per writer: ``plan_id``
-  -> per-layer operator content keys (``"exact"`` for exact layers) and
-  the width map when serving mixed width.  The analog of telemetry's
-  plan table, but durable next to the trace.
+  -> per-layer operator content keys (``"exact"`` for exact layers),
+  the width map when serving mixed width, and — for the cost plane —
+  the per-layer operator area bracket (``areas``/``areas_hi``, exact
+  layers carry the baseline) plus the per-layer ``exact_area``.  The
+  analog of telemetry's plan table, but durable next to the trace.
+* ``model`` — the serving model's LUT-routable MLP MAC vector
+  (:func:`repro.obs.costs.mlp_macs_per_layer`), written once per
+  writer so ``python -m repro.obs costs`` prices a ledger offline
+  without reloading the model config.
 * ``range`` — one request's contiguous run of generated-token indices
   ``[t0, t1)`` decoded under a single plan/ladder level, plus the
   shadow-drift samples the engine measured while the range was open.
@@ -74,6 +80,7 @@ class ProvenanceLedger:
         self._fh = None
         self._lock = threading.Lock()
         self._plans_written: set[str] = set()
+        self._model_written = False
 
     @property
     def path(self) -> Path:
@@ -91,29 +98,55 @@ class ProvenanceLedger:
 
     # ----------------------------------------------------------------- write
     def note_plan(self, plan_id: str, layers: list[str],
-                  width_map=None) -> None:
+                  width_map=None, *, areas=None, areas_hi=None,
+                  exact_area=None) -> None:
         """Record a plan's identity once per writer (content-addressed
         ids make cross-writer duplicates harmless — ``audit`` keeps the
-        first)."""
+        first).  ``areas``/``areas_hi`` carry the per-layer operator
+        area bracket and ``exact_area`` the per-layer exact baseline,
+        so the cost plane can price the plan offline."""
         if plan_id in self._plans_written:
             return
         self._plans_written.add(plan_id)
-        self._write({"k": "plan", "plan": plan_id, "layers": list(layers),
-                     "width_map": (list(int(b) for b in width_map)
-                                   if width_map is not None else None)})
+        doc = {"k": "plan", "plan": plan_id, "layers": list(layers),
+               "width_map": (list(int(b) for b in width_map)
+                             if width_map is not None else None)}
+        if areas is not None:
+            doc["areas"] = [round(float(a), 6) for a in areas]
+        if areas_hi is not None:
+            doc["areas_hi"] = [round(float(a), 6) for a in areas_hi]
+        if exact_area is not None:
+            doc["exact_area"] = round(float(exact_area), 6)
+        self._write(doc)
+
+    def note_model(self, *, name: str, macs: list[int]) -> None:
+        """Record the model's per-layer LUT-routable MAC vector once per
+        writer — the denominator every cost attribution joins against."""
+        if self._model_written:
+            return
+        self._model_written = True
+        self._write({"k": "model", "name": name,
+                     "n_layers": len(macs),
+                     "macs": [int(m) for m in macs]})
 
     def record_range(self, *, rid: int, cls: str, t0: int, t1: int,
                      plan: str, level: int | None,
-                     drift: list[float]) -> None:
-        self._write({"k": "range", "rid": int(rid), "cls": cls,
-                     "t0": int(t0), "t1": int(t1), "plan": plan,
-                     "level": level, "drift": list(drift)})
+                     drift: list[float], replica: str | None = None) -> None:
+        doc = {"k": "range", "rid": int(rid), "cls": cls,
+               "t0": int(t0), "t1": int(t1), "plan": plan,
+               "level": level, "drift": list(drift)}
+        if replica:
+            doc["replica"] = replica
+        self._write(doc)
 
     def record_done(self, *, rid: int, cls: str, gen_len: int, steps: int,
-                    preempts: int) -> None:
-        self._write({"k": "done", "rid": int(rid), "cls": cls,
-                     "gen_len": int(gen_len), "steps": int(steps),
-                     "preempts": int(preempts)})
+                    preempts: int, replica: str | None = None) -> None:
+        doc = {"k": "done", "rid": int(rid), "cls": cls,
+               "gen_len": int(gen_len), "steps": int(steps),
+               "preempts": int(preempts)}
+        if replica:
+            doc["replica"] = replica
+        self._write(doc)
 
     def close(self) -> None:
         with self._lock:
@@ -168,25 +201,38 @@ def audit(records: list[dict]) -> dict:
     plan id has a ``plan`` record (``"exact"`` — the planless serve — is
     implicitly known).  Requests without a ``done`` (still in flight, or
     a serve that crashed) are reported but never counted as failures.
+
+    Records are grouped by ``(rid, replica)``: two replicas that served
+    the same rid (separate routers sharing one trace dir) never blend
+    ranges into a false overlap — the report keys stay plain rids when
+    unique and become ``"<rid>@<replica>"`` only on collision.
     """
     plans: dict[str, dict] = {}
-    reqs: dict[int, dict] = {}
+    reqs: dict[tuple, dict] = {}
     for r in records:
         if r["k"] == "plan":
-            plans.setdefault(r["plan"], {
-                "layers": r.get("layers", []),
-                "width_map": r.get("width_map")})
-        elif r["k"] == "range":
-            row = reqs.setdefault(r["rid"], {"ranges": [], "done": None})
-            row["ranges"].append(r)
-        elif r["k"] == "done":
-            row = reqs.setdefault(r["rid"], {"ranges": [], "done": None})
-            row["done"] = r
+            entry = {"layers": r.get("layers", []),
+                     "width_map": r.get("width_map")}
+            for extra in ("areas", "areas_hi", "exact_area"):
+                if r.get(extra) is not None:
+                    entry[extra] = r[extra]
+            plans.setdefault(r["plan"], entry)
+        elif r["k"] in ("range", "done"):
+            gkey = (r["rid"], r.get("replica") or "")
+            row = reqs.setdefault(gkey, {"ranges": [], "done": None})
+            if r["k"] == "range":
+                row["ranges"].append(r)
+            else:
+                row["done"] = r
 
-    out_reqs: dict[int, dict] = {}
+    rid_groups: dict[int, int] = {}
+    for rid, _ in reqs:
+        rid_groups[rid] = rid_groups.get(rid, 0) + 1
+    out_reqs: dict = {}
     n_done = n_complete = 0
-    for rid in sorted(reqs):
-        row = reqs[rid]
+    for gkey in sorted(reqs):
+        rid, replica = gkey
+        row = reqs[gkey]
         ranges = sorted(row["ranges"], key=lambda r: (r["t0"], r["t1"]))
         done = row["done"]
         drift = [d for r in ranges for d in r.get("drift", ())]
@@ -211,6 +257,8 @@ def audit(records: list[dict]) -> dict:
             "tokens_covered": covered,
             "drift_samples": len(drift),
         }
+        if replica:
+            rep["replica"] = replica
         if drift:
             rep["mean_drift"] = round(sum(drift) / len(drift), 6)
             rep["max_drift"] = round(max(drift), 6)
@@ -229,7 +277,8 @@ def audit(records: list[dict]) -> dict:
         rep["complete"] = done is not None and not [
             p for p in problems if not p.startswith("no done")]
         rep["problems"] = problems
-        out_reqs[rid] = rep
+        out_reqs[rid if rid_groups[rid] == 1
+                 else f"{rid}@{replica or '?'}"] = rep
 
     return {
         "plans": plans,

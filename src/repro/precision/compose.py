@@ -51,6 +51,7 @@ __all__ = [
     "is_composed",
     "compose_table",
     "compose_blocks",
+    "compose_glue_bits",
     "verify_exactness",
 ]
 
@@ -232,7 +233,10 @@ def compose_table(base: np.ndarray, op_kind: str, block_bits: int,
 def compose_blocks(block_bits: int, target_bits: int) -> int:
     """How many block instances the composed operator spends — the area
     model of composition (adder glue between partial products is ignored;
-    the planner documents this as a lower bound).
+    this is the documented *lower bound* — :func:`compose_glue_bits`
+    bounds the glue from above, and the two together give the
+    ``area_lo``/``area_hi`` bracket ``CompiledLut`` carries for the cost
+    plane).
 
     Two-stage for wide multipliers: ``ceil(4/b)**2`` blocks per 16x16
     tile, ``(target/4)**2`` tiles.
@@ -243,3 +247,29 @@ def compose_blocks(block_bits: int, target_bits: int) -> int:
     per_tile = (-(-NATIVE_BLOCK_BITS // block_bits)) ** 2
     n_tiles = (target_bits // NATIVE_BLOCK_BITS) ** 2
     return per_tile * n_tiles
+
+
+def compose_glue_bits(block_bits: int, target_bits: int) -> int:
+    """Upper bound on the full-adder *bit positions* the shift-add glue
+    of a composed multiplier spends — the part :func:`compose_blocks`
+    deliberately ignores.
+
+    Every stage that sums ``P`` partial products needs ``P - 1``
+    two-input additions; bounding each at the stage's full product width
+    (``2 × stage bits`` — real shift-add chains are narrower because the
+    shifted operands only overlap partially) makes the result a sound
+    ceiling: multiply by a per-bit ripple-adder cell area and add it to
+    the block-count area to get ``area_hi``.
+    """
+    b, t = int(block_bits), int(target_bits)
+    if t <= b:
+        return 0
+    if t <= NATIVE_BLOCK_BITS:
+        n = (-(-t // b)) ** 2
+        return (n - 1) * 2 * t
+    # two-level form: every 16x16 tile is itself a b->4 composition
+    # (its glue repeats per tile instance), then the tile products are
+    # summed at the full target width
+    per_tile = compose_glue_bits(b, NATIVE_BLOCK_BITS)
+    n_tiles = (t // NATIVE_BLOCK_BITS) ** 2
+    return n_tiles * per_tile + (n_tiles - 1) * 2 * t

@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..library.qos import LayerPlan, refresh_plan, stack_luts, validate_lut_stack
+from ..library.qos import (LayerPlan, plan_layer_areas, refresh_plan,
+                           stack_luts, validate_lut_stack)
 from ..models import decode_fn, init_caches
 from ..obs.trace import current_tracer
 from ..obs.trace import event as trace_event
@@ -48,6 +49,20 @@ from .loadgen import LoadProfile, Request, synth_requests
 from .telemetry import Telemetry
 
 __all__ = ["BatchStats", "ServingEngine", "ContinuousServingEngine"]
+
+
+def _area_hi_map(compiled) -> dict[str, float]:
+    """Operator key -> glue-inclusive area upper bound over a compiled
+    frontier (``CompiledLut.area_hi``; records compiled without a
+    bracket collapse to their own area).  Mixed-width frontiers can
+    carry one key at two widths — keeping the max keeps the value a
+    sound upper bound."""
+    out: dict[str, float] = {}
+    for rec, comp in compiled:
+        hi = getattr(comp, "area_hi", None)
+        hi = rec.area if hi is None else max(rec.area, hi)
+        out[rec.key] = max(out.get(rec.key, 0.0), hi)
+    return out
 
 
 @dataclass
@@ -130,6 +145,11 @@ class ServingEngine:
         self._profile = sens_profile
         self._mae_by_key = {rec.key: comp.mae
                             for rec, comp in self._compiled}
+        self._area_hi_by_key = _area_hi_map(self._compiled)
+        # per-plan cost rows (repro.obs.costs.plan_cost_row), cached by
+        # plan_id so the per-step cost attribution is a dict lookup
+        self._cost_rows: dict[str, dict] = {}
+        self._macs_per_layer = None
 
         if self._adaptive:
             assert cfg.approx_mlp, (
@@ -277,6 +297,8 @@ class ServingEngine:
                                  telemetry=telemetry, batch_idx=batch_idx)
         self._compiled = list(compiled)
         self._mae_by_key = {rec.key: comp.mae for rec, comp in self._compiled}
+        self._area_hi_by_key = _area_hi_map(self._compiled)
+        self._cost_rows = {}
         self._exact_area = exact_area
         if controller is not None:
             controller.adopt(new_ladder, level=level)
@@ -323,6 +345,8 @@ class ServingEngine:
                                  telemetry=telemetry, batch_idx=batch_idx)
         self._compiled = list(mixed.compiled)
         self._mae_by_key = {rec.key: comp.mae for rec, comp in self._compiled}
+        self._area_hi_by_key = _area_hi_map(self._compiled)
+        self._cost_rows = {}
         if old is not None and controller is not None:
             controller.adopt(new_ladder, level=level)
         if old is not None and scheduler is not None:
@@ -711,6 +735,12 @@ class ContinuousServingEngine(ServingEngine):
     strictly by priority.
     """
 
+    # class-level defaults so the provenance/cost bookkeeping helpers stay
+    # drivable on a bare instance (tests exercise them without __init__)
+    replica_name = ""
+    _area_hi_by_key: dict[str, float] = {}
+    _macs_per_layer = None
+
     def __init__(self, cfg, params, *, max_slots: int, prompt_len: int,
                  gen_len: int, page_size: int = 8, n_pages: int | None = None,
                  steps_per_tick: int | None = None, **kw) -> None:
@@ -837,6 +867,19 @@ class ContinuousServingEngine(ServingEngine):
 
                 self._provenance = ledger_for(tr.root, tr.tag)
         self._prov_open: dict[int, dict] = {}
+        # cost plane: the model's LUT-routable MAC vector prices every
+        # provenance range; families that never route (RWKV) serve with
+        # the cost plane off
+        from ..obs.costs import mlp_macs_per_layer
+
+        try:
+            self._macs_per_layer = mlp_macs_per_layer(self.cfg)
+        except ValueError:
+            self._macs_per_layer = None
+        self._cost_rows = {}
+        if self._provenance is not None and self._macs_per_layer is not None:
+            self._provenance.note_model(name=self.cfg.name,
+                                        macs=self._macs_per_layer)
         if self._adaptive:
             self.telemetry.register_plan(self._plan)
         self._started = True
@@ -1001,12 +1044,21 @@ class ContinuousServingEngine(ServingEngine):
         if r is not None:
             self._provenance.record_range(**r)
         if plan_b is not None:
+            # plans missing an exact_area (stub plans in direct-drive
+            # tests) stay unpriced; the cost audit flags them
+            exact_area = getattr(plan_b, "exact_area", None)
+            areas = (plan_layer_areas(plan_b, self._area_hi_by_key)
+                     if exact_area is not None else None)
             self._provenance.note_plan(
                 plan_b.plan_id, [c.key or "exact" for c in plan_b.choices],
-                width_map=self._width_map)
+                width_map=self._width_map,
+                areas=[lo for lo, _ in areas] if areas else None,
+                areas_hi=[hi for _, hi in areas] if areas else None,
+                exact_area=exact_area)
         self._prov_open[seq.rid] = {
             "rid": seq.rid, "cls": seq.cls, "t0": token_idx,
-            "t1": token_idx + 1, "plan": pid, "level": level, "drift": []}
+            "t1": token_idx + 1, "plan": pid, "level": level, "drift": [],
+            "replica": self.replica_name or None}
 
     def _prov_close(self, rid: int) -> None:
         if self._provenance is None:
@@ -1014,6 +1066,22 @@ class ContinuousServingEngine(ServingEngine):
         r = self._prov_open.pop(rid, None)
         if r is not None:
             self._provenance.record_range(**r)
+
+    def _cost_row(self, plan_b) -> dict:
+        """The per-token cost increments of the step's live plan, cached
+        by plan id (refresh paths invalidate — areas can move when a
+        background sweep lands a new frontier)."""
+        pid = plan_b.plan_id if plan_b is not None else "exact"
+        row = self._cost_rows.get(pid)
+        if row is None:
+            from ..obs.costs import plan_cost_row
+
+            areas = (plan_layer_areas(plan_b, self._area_hi_by_key)
+                     if plan_b is not None else None)
+            row = plan_cost_row(plan_b, self._macs_per_layer,
+                                layer_areas=areas)
+            self._cost_rows[pid] = row
+        return row
 
     # ------------------------------------------------------------------ step
     def _resolve_stack(self, active_classes):
@@ -1161,7 +1229,16 @@ class ContinuousServingEngine(ServingEngine):
                     self._prov_close(seq.rid)
                     self._provenance.record_done(
                         rid=seq.rid, cls=seq.cls, gen_len=len(gen),
-                        steps=seq.pos, preempts=seq.preempted)
+                        steps=seq.pos, preempts=seq.preempted,
+                        replica=self.replica_name or None)
+
+        if self._macs_per_layer is not None:
+            cost_row = self._cost_row(plan_b if self._adaptive else None)
+            for cls, r in by_class.items():
+                if r["decode_tokens"]:
+                    self.telemetry.record_costs(
+                        cls if self._scheduler is not None else None,
+                        r["decode_tokens"], cost_row)
 
         backlog = self._queues.depth
         occ = self._pool.occupancy

@@ -179,9 +179,22 @@ class ReplicaRouter:
                 s["health"] = r.health.report()
             per[r.name] = s
         total_req = sum(s["requests"] for s in per.values())
-        return {
+        out = {
             "replicas": per,
             "requests": total_req,
             "preemptions": sum(s.get("preemptions", 0)
                                for s in per.values()),
         }
+        # fleet-level cost dividend: the per-replica attributions sum —
+        # the invariant the multi-replica provenance test pins against
+        # the merged ledger
+        costs = [s["costs"] for s in per.values() if "costs" in s]
+        if costs:
+            out["costs"] = {
+                "mlp_macs": sum(c["mlp_macs"] for c in costs),
+                "approx_macs": sum(c["approx_macs"] for c in costs),
+                "area_mac_saved": [
+                    round(sum(c["area_mac_saved"][0] for c in costs), 4),
+                    round(sum(c["area_mac_saved"][1] for c in costs), 4)],
+            }
+        return out

@@ -78,6 +78,22 @@ class Telemetry:
         c = self.registry.find(name, **{"class": cls})
         return c.value if c is not None else 0.0
 
+    def _cost_block(self, cls: str = ALL_CLASSES) -> dict | None:
+        macs = self._counter_value("mlp_macs", cls)
+        if not macs:
+            return None
+        lo = self.registry.find("area_mac_saved",
+                                **{"class": cls, "layer": ALL_CLASSES})
+        hi = self.registry.find("area_mac_saved_hi",
+                                **{"class": cls, "layer": ALL_CLASSES})
+        return {
+            "mlp_macs": int(macs),
+            "approx_macs": int(self._counter_value("approx_macs", cls)),
+            "area_mac_saved": [
+                round(lo.value if lo is not None else 0.0, 4),
+                round(hi.value if hi is not None else 0.0, 4)],
+        }
+
     # ------------------------------------------------------------------ write
     def register_plan(self, plan) -> str:
         """Record a :class:`~repro.library.qos.LayerPlan`'s identity once;
@@ -188,6 +204,38 @@ class Telemetry:
             "backlog": backlog,
             "occupancy": round(occupancy, 3),
         })
+
+    def record_costs(self, qos_class: str | None, tokens: int,
+                     row: dict) -> None:
+        """Attribute one step's decoded tokens to the live plan's cost
+        row (:func:`repro.obs.costs.plan_cost_row`, cached per plan by
+        the engine).  Exports the paper's dividend as counters:
+        ``mlp_macs_total``/``approx_macs_total{class}`` and
+        ``area_mac_saved_total{class,layer}`` (the guaranteed lower
+        bound; ``area_mac_saved_hi_total`` carries the optimistic end of
+        the bracket, see :mod:`repro.obs.costs`)."""
+        if not tokens or row is None:
+            return
+        self._count("mlp_macs", qos_class, tokens * row["macs"])
+        self._count("approx_macs", qos_class, tokens * row["approx_macs"])
+
+        def saved(cls: str) -> None:
+            self.registry.counter(
+                "area_mac_saved",
+                **{"class": cls, "layer": ALL_CLASSES}).inc(
+                    tokens * row["saved_lo"])
+            self.registry.counter(
+                "area_mac_saved_hi",
+                **{"class": cls, "layer": ALL_CLASSES}).inc(
+                    tokens * row["saved_hi"])
+            for layer, v in row["layers"].items():
+                self.registry.counter(
+                    "area_mac_saved",
+                    **{"class": cls, "layer": layer}).inc(tokens * v)
+
+        saved(ALL_CLASSES)
+        if qos_class is not None:
+            saved(qos_class)
 
     def record_pages(self, *, used: int, total: int) -> None:
         """Page-pool occupancy gauges (continuous engine, per step) —
@@ -307,6 +355,9 @@ class Telemetry:
         pre = self._counter_value("serve_preemptions_total", cls)
         if pre:
             row["preemptions"] = int(pre)
+        costs = self._cost_block(cls)
+        if costs is not None:
+            row["costs"] = costs
         return row
 
     def summary(self) -> dict:
@@ -359,6 +410,9 @@ class Telemetry:
         if ttft is not None and ttft.count:
             out["ttft_ms"] = {
                 p: round(v, 3) for p, v in ttft.percentiles().items()}
+        costs = self._cost_block()
+        if costs is not None:
+            out["costs"] = costs
         classes = {cls: self._class_row(cls) for cls in self._class_names()}
         if classes:
             out["classes"] = classes

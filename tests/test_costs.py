@@ -1,0 +1,509 @@
+"""Cost-accounting plane, live scrape endpoint, and Chrome-trace export.
+
+Unit coverage for MAC derivation, plan pricing, the ledger-joining cost
+report and its hard reconciliation invariant, the composed-area bracket,
+the ``costs``/``export`` CLI subcommands (plus the uniform no-trace
+exit-2 contract), the ``MetricsServer`` endpoints, and the Perfetto
+exporter — then the multi-replica traced-serve e2e: a two-replica router
+whose merged ledger audits clean and whose per-replica attributions sum
+to the fleet total.
+"""
+
+import json
+import types
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.arith import benchmark  # noqa: E402
+from repro.library.compile import load_mul_frontier  # noqa: E402
+from repro.models import init_model  # noqa: E402
+from repro.obs import metrics as obs_metrics  # noqa: E402
+from repro.obs import provenance as obs_prov  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
+from repro.obs.__main__ import main as obs_main  # noqa: E402
+from repro.obs.costs import (cost_report, mlp_macs_per_layer,  # noqa: E402
+                             plan_cost_row, render_report)
+from repro.obs.httpd import MetricsServer  # noqa: E402
+from repro.obs.metrics import MetricRegistry  # noqa: E402
+from repro.obs.perfetto import chrome_trace  # noqa: E402
+from repro.obs.provenance import (ProvenanceLedger, audit,  # noqa: E402
+                                  read_ledger)
+from repro.precision.compose import (compose_blocks,  # noqa: E402
+                                     compose_glue_bits)
+from repro.serving import (ContinuousServingEngine, PlanLadder,  # noqa: E402
+                           Replica, ReplicaRouter, Telemetry, make_profile)
+
+from test_serving import fill_library, trunc_mul2, zero_mul2  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _isolate_obs_globals():
+    obs_trace.reset()
+    prev = obs_metrics.set_registry(MetricRegistry())
+    obs_prov._ledgers.clear()
+    yield
+    obs_trace.reset()
+    obs_metrics.set_registry(prev)
+    obs_prov._ledgers.clear()
+
+
+# ---------------------------------------------------------------------------
+# MAC derivation per model family
+# ---------------------------------------------------------------------------
+def test_mlp_macs_per_layer_families():
+    dense = get_config("gemma3-1b", reduced=True)
+    m = mlp_macs_per_layer(dense)
+    assert len(m) == dense.n_layers
+    assert m[0] == 3 * dense.d_model * dense.d_ff        # gated: w1,w3,w2
+
+    enc = get_config("whisper-tiny", reduced=True)
+    assert mlp_macs_per_layer(enc)[0] == 2 * enc.d_model * enc.d_ff
+
+    # MoE: only the always-on shared experts route through the LUT path;
+    # the top-k dispatch is exact, so n_shared=0 earns an honest zero
+    ds = get_config("deepseek-v2-lite-16b", reduced=True)
+    assert mlp_macs_per_layer(ds)[0] \
+        == ds.moe.n_shared * 3 * ds.d_model * ds.moe.d_ff_expert
+    mx = get_config("mixtral-8x7b", reduced=True)
+    assert mx.moe.n_shared == 0 and mlp_macs_per_layer(mx)[0] == 0
+
+    with pytest.raises(ValueError, match="RWKV"):
+        mlp_macs_per_layer(get_config("rwkv6-3b", reduced=True))
+
+
+def test_plan_cost_row_prices_the_bracket():
+    choices = [types.SimpleNamespace(key=None, area=10.0),
+               types.SimpleNamespace(key="k1", area=2.0)]
+    plan = types.SimpleNamespace(plan_id="p", choices=choices,
+                                 exact_area=10.0)
+    macs = [100, 100]
+    row = plan_cost_row(plan, macs, layer_areas=[(10.0, 10.0), (2.0, 4.0)])
+    assert row["macs"] == 200 and row["approx_macs"] == 100
+    # guaranteed end prices against the glue-inclusive upper-bound area
+    assert row["saved_lo"] == pytest.approx(100 * (10.0 - 4.0))
+    assert row["saved_hi"] == pytest.approx(100 * (10.0 - 2.0))
+    assert row["layers"] == {"1": pytest.approx(600.0)}
+
+    # exact serve: full MAC denominator, zero dividend
+    exact = plan_cost_row(None, macs)
+    assert exact["macs"] == 200 and exact["approx_macs"] == 0
+    assert exact["saved_lo"] == exact["saved_hi"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# composed-area honesty: the glue-adder bracket
+# ---------------------------------------------------------------------------
+def test_compose_glue_bits_counts_partial_product_adders():
+    assert compose_glue_bits(4, 4) == 0          # native: nothing composed
+    # 2-bit blocks -> 4-bit: 4 partial products, 3 adds at full width
+    assert compose_glue_bits(2, 4) == 3 * 2 * 4
+    # beyond the native block: per-tile glue plus the tile-combine stage
+    n_tiles = (8 // 4) ** 2
+    assert compose_glue_bits(4, 8) == (n_tiles - 1) * 2 * 8
+    assert compose_glue_bits(2, 8) \
+        == n_tiles * compose_glue_bits(2, 4) + (n_tiles - 1) * 2 * 8
+    assert compose_blocks(4, 8) == n_tiles       # sanity: area scaling
+
+
+def test_compiled_frontier_carries_area_bracket(tmp_path):
+    store = fill_library(tmp_path / "lib",
+                         [benchmark("mul_i4"), trunc_mul2(), zero_mul2()])
+    assert store is not None
+    native, _, _ = load_mul_frontier(tmp_path / "lib")
+    for rec, comp in native:
+        # native tables: nothing composed, the bracket collapses
+        assert comp.area_lo == comp.area_hi == pytest.approx(rec.area)
+
+    composed, _, _ = load_mul_frontier(tmp_path / "lib", target_bits=8)
+    assert composed, "no composed W8 frontier"
+    for rec, comp in composed:
+        assert comp.area_lo == pytest.approx(rec.area), \
+            "record area must stay the documented lower bound"
+        # the ceiling prices the glue adders; for a degenerate near-zero
+        # LUT it may exceed the monolithic exact area — the bracket stays
+        # honest rather than clamped
+        assert comp.area_hi > comp.area_lo, \
+            "composed operator must price its glue adders somewhere"
+
+
+# ---------------------------------------------------------------------------
+# offline cost report over synthetic ledgers
+# ---------------------------------------------------------------------------
+def _clock():
+    t = [0.0]
+
+    def tick():
+        t[0] += 1.0
+        return t[0]
+
+    return tick
+
+
+def _write_ledger(root, *, gap=False, unpriced=False, tag="w0"):
+    led = ProvenanceLedger(root, tag=tag, clock=_clock())
+    led.note_model(name="toy", macs=[10, 10])
+    if unpriced:
+        led.note_plan("p0", ["exact", "k1"])
+    else:
+        led.note_plan("p0", ["exact", "k1"], areas=[5.0, 2.0],
+                      areas_hi=[5.0, 3.0], exact_area=5.0)
+    led.record_range(rid=1, cls="gold", t0=0, t1=4, plan="exact",
+                     level=None, drift=[])
+    led.record_done(rid=1, cls="gold", gen_len=4, steps=5, preempts=0)
+    t1 = 3 if gap else 4
+    led.record_range(rid=2, cls="batch", t0=0, t1=t1, plan="p0", level=1,
+                     drift=[0.01])
+    led.record_done(rid=2, cls="batch", gen_len=4, steps=5, preempts=0)
+    led.close()
+    return read_ledger(root)
+
+
+def test_cost_report_reconciles_and_attributes(tmp_path):
+    rep = cost_report(_write_ledger(tmp_path))
+    assert rep["reconciled"] is True and rep["mac_gap"] == 0
+    assert rep["model"]["macs_per_token"] == 20
+    # rid 1 decoded exact: full MACs, zero dividend; rid 2 on p0: layer 1
+    # approximate for all 4 tokens
+    assert rep["requests"][1]["approx_macs"] == 0
+    r2 = rep["requests"][2]
+    assert r2["mlp_macs"] == 80 and r2["approx_macs"] == 40
+    assert r2["area_mac_saved"] == [pytest.approx(40 * (5 - 3)),
+                                    pytest.approx(40 * (5 - 2))]
+    assert r2["reconciled"] and r2["expected_macs"] == 80
+    assert rep["totals"]["mlp_macs"] == 160
+    assert rep["totals"]["approx_frac"] == pytest.approx(40 / 160)
+    assert rep["classes"]["gold"]["area_mac_saved"] == [0.0, 0.0]
+    assert rep["classes"]["batch"]["area_mac_saved"][0] > 0
+    # layer attribution: only layer 1 earned anything
+    assert set(rep["layers"]) == {"1"}
+    assert rep["layers"]["1"]["area_mac_saved"][0] == pytest.approx(80.0)
+    assert not rep["problems"]
+    assert "reconciled=true" in render_report(rep)
+
+
+def test_cost_report_gap_is_an_audit_failure(tmp_path):
+    rep = cost_report(_write_ledger(tmp_path, gap=True))
+    assert rep["reconciled"] is False
+    assert rep["mac_gap"] == 20, "one missing token x 20 MACs/token"
+    assert any("gap" in p for p in rep["problems"])
+    assert rep["requests"][2]["reconciled"] is False
+
+
+def test_cost_report_unpriced_plan_fails_reconciliation(tmp_path):
+    rep = cost_report(_write_ledger(tmp_path, unpriced=True))
+    assert rep["reconciled"] is False
+    assert any("no area record" in p for p in rep["problems"])
+    # MAC attribution still tiles — only the pricing is missing
+    assert rep["requests"][2]["approx_macs"] == 40
+    assert rep["requests"][2]["area_mac_saved"] == [0.0, 0.0]
+
+
+def test_cost_report_without_model_record(tmp_path):
+    led = ProvenanceLedger(tmp_path, tag="w0", clock=_clock())
+    led.record_range(rid=1, cls="std", t0=0, t1=2, plan="exact",
+                     level=None, drift=[])
+    led.record_done(rid=1, cls="std", gen_len=2, steps=3, preempts=0)
+    led.close()
+    rep = cost_report(read_ledger(tmp_path))
+    assert rep["reconciled"] is False
+    assert any("no model record" in p for p in rep["problems"])
+
+
+def test_audit_same_rid_on_two_replicas_disambiguates(tmp_path):
+    """Satellite: two replicas sharing one trace dir may reuse rids —
+    the audit groups by (rid, replica) so their ranges never blend into
+    a false overlap, and report keys disambiguate only on collision."""
+    led = ProvenanceLedger(tmp_path, tag="w0", clock=_clock())
+    led.note_model(name="toy", macs=[10])
+    for rep_name in ("a", "b"):
+        led.record_range(rid=7, cls="std", t0=0, t1=4, plan="exact",
+                         level=None, drift=[], replica=rep_name)
+        led.record_done(rid=7, cls="std", gen_len=4, steps=5, preempts=0,
+                        replica=rep_name)
+    led.record_range(rid=8, cls="std", t0=0, t1=4, plan="exact",
+                     level=None, drift=[], replica="a")
+    led.record_done(rid=8, cls="std", gen_len=4, steps=5, preempts=0,
+                    replica="a")
+    led.close()
+
+    rep = audit(read_ledger(tmp_path))
+    assert rep["n_failed"] == 0, "same-rid replicas blended into overlap"
+    assert set(rep["requests"]) == {"7@a", "7@b", 8}
+    assert rep["requests"]["7@a"]["replica"] == "a"
+    assert rep["requests"][8]["replica"] == "a", \
+        "unique rids keep plain keys even with a replica stamp"
+
+    costs = cost_report(read_ledger(tmp_path))
+    assert costs["reconciled"] is True
+    assert costs["replicas"]["a"]["tokens"] == 8
+    assert costs["replicas"]["b"]["tokens"] == 4
+
+
+# ---------------------------------------------------------------------------
+# CLI: costs + export + the uniform no-trace exit-2 contract
+# ---------------------------------------------------------------------------
+def test_cli_costs_report_and_gate(tmp_path, capsys):
+    _write_ledger(tmp_path)
+    assert obs_main(["costs", "--trace", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "reconciled=true" in out and "area·MAC saved" in out
+
+    assert obs_main(["costs", "--trace", str(tmp_path), "--json",
+                     "--require-reconciled"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["reconciled"] is True
+    assert doc["classes"]["batch"]["approx_macs"] == 40
+
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    _write_ledger(bad, gap=True)
+    assert obs_main(["costs", "--trace", str(bad)]) == 0, \
+        "without the gate flag a gap reports, it does not fail"
+    capsys.readouterr()
+    assert obs_main(["costs", "--trace", str(bad),
+                     "--require-reconciled"]) == 1
+    assert "did not reconcile" in capsys.readouterr().err
+
+
+def test_cli_no_trace_exits_2_uniformly(tmp_path, capsys):
+    """Satellite: every trace-reading subcommand answers a missing or
+    empty --trace dir with one line on stderr and exit 2."""
+    missing = tmp_path / "nope"
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    (empty / "notes.txt").write_text("not a trace artifact")
+    for cmd in ("summary", "slowest", "requests", "provenance", "costs",
+                "export"):
+        for d in (missing, empty):
+            assert obs_main([cmd, "--trace", str(d)]) == 2, (cmd, d)
+            err = capsys.readouterr().err
+            assert f"no trace at {d}" in err, (cmd, d, err)
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export
+# ---------------------------------------------------------------------------
+def _span(sid, name, t0, dur, parent=None, **attrs):
+    return {"id": sid, "name": name, "t0": t0, "dur_s": dur,
+            "parent": parent, "attrs": attrs}
+
+
+def test_chrome_trace_preserves_parentage_and_packs_lanes():
+    spans = [
+        _span("a", "serve.batch", 100.0, 0.010, batch=0),
+        _span("b", "serve.decode", 100.001, 0.002, parent="a"),
+        _span("c", "serve.shadow", 100.0015, 0.0005, parent="b"),
+        _span("d", "fleet.job", 100.005, 0.010),          # overlaps a
+        _span("e", "serve.batch", 100.020, 0.005),        # after a: lane reuse
+    ]
+    doc = chrome_trace(spans)
+    assert doc["displayTimeUnit"] == "ms"
+    evs = {e["args"]["span_id"]: e for e in doc["traceEvents"]
+           if e["ph"] == "X"}
+    assert set(evs) == {"a", "b", "c", "d", "e"}
+    # µs timestamps relative to the trace start
+    assert evs["a"]["ts"] == 0.0 and evs["a"]["dur"] == pytest.approx(1e4)
+    assert evs["b"]["ts"] == pytest.approx(1e3)
+    # children ride their root's track and nest inside the parent window
+    for child, parent in (("b", "a"), ("c", "b")):
+        assert evs[child]["tid"] == evs[parent]["tid"]
+        assert evs[child]["args"]["parent_id"] == parent
+        assert evs[child]["ts"] >= evs[parent]["ts"]
+        assert evs[child]["ts"] + evs[child]["dur"] \
+            <= evs[parent]["ts"] + evs[parent]["dur"] + 1e-6
+    # overlapping roots on separate tracks; a later root reuses a track
+    assert evs["d"]["tid"] != evs["a"]["tid"]
+    assert evs["e"]["tid"] == evs["a"]["tid"]
+    assert evs["a"]["args"]["batch"] == 0, "span attrs must survive"
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert any(e["name"] == "process_name" for e in meta)
+
+
+def test_chrome_trace_orphan_parent_becomes_root():
+    doc = chrome_trace([_span("x", "serve.decode", 1.0, 0.5,
+                              parent="torn-away")])
+    evs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(evs) == 1 and evs[0]["tid"] == 1
+
+
+def test_cli_export_writes_loadable_chrome_trace(tmp_path, capsys):
+    from repro.obs.trace import Tracer
+
+    tr = Tracer(tmp_path, clock=_clock(), process_tag="w0")
+    with tr.span("serve.batch", batch=0):
+        with tr.span("serve.decode"):
+            pass
+    tr.close()
+
+    out = tmp_path / "out" / "trace.json"
+    assert obs_main(["export", "--trace", str(tmp_path), "--format",
+                     "chrome", "--out", str(out)]) == 0
+    assert "wrote" in capsys.readouterr().out
+    doc = json.loads(out.read_text())
+    evs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert {e["name"] for e in evs} == {"serve.batch", "serve.decode"}
+    child = next(e for e in evs if e["name"] == "serve.decode")
+    parent = next(e for e in evs if e["name"] == "serve.batch")
+    assert child["args"]["parent_id"] == parent["args"]["span_id"]
+    assert child["tid"] == parent["tid"]
+
+
+# ---------------------------------------------------------------------------
+# live scrape endpoint
+# ---------------------------------------------------------------------------
+def _get(port, path):
+    try:
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}{path}", timeout=5) as r:
+            return r.status, r.read().decode()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode()
+
+
+def test_metrics_server_endpoints(tmp_path):
+    _write_ledger(tmp_path)
+    tel = Telemetry()
+    tel.record_costs("gold", 4, {"macs": 20, "approx_macs": 10,
+                                 "saved_lo": 6.0, "saved_hi": 8.0,
+                                 "layers": {"1": 6.0}})
+    state = {"state": "ok"}
+    srv = MetricsServer(port=0, snapshot_providers=[tel.registry.snapshot],
+                        health_provider=lambda: dict(state),
+                        trace_dir=str(tmp_path))
+    port = srv.start()
+    try:
+        status, body = _get(port, "/metrics")
+        assert status == 200
+        assert 'approx_macs_total{class="gold"} 40' in body
+        assert 'area_mac_saved_total{class="gold",layer="_all"} 24' in body
+        assert 'area_mac_saved_total{class="gold",layer="1"} 24' in body
+
+        # live: a later increment shows up on the next scrape
+        tel.record_costs("gold", 1, {"macs": 20, "approx_macs": 10,
+                                     "saved_lo": 6.0, "saved_hi": 8.0,
+                                     "layers": {}})
+        assert 'approx_macs_total{class="gold"} 50' in _get(
+            port, "/metrics")[1]
+
+        for st, code in (("ok", 200), ("warn", 429), ("page", 503)):
+            state["state"] = st
+            status, body = _get(port, "/healthz")
+            assert status == code and json.loads(body)["state"] == st
+
+        status, body = _get(port, "/costs.json")
+        assert status == 200
+        doc = json.loads(body)
+        assert doc["reconciled"] is True and doc["totals"]["tokens"] == 8
+
+        assert _get(port, "/nope")[0] == 404
+    finally:
+        srv.stop()
+
+
+def test_metrics_server_merges_trace_snapshots_and_survives_no_ledger(
+        tmp_path):
+    from repro.obs.export import dump_metrics
+
+    other = MetricRegistry()
+    other.counter("fleet_jobs").inc(3)
+    dump_metrics(tmp_path, other, tag="fleet")
+
+    srv = MetricsServer(port=0, trace_dir=str(tmp_path))
+    port = srv.start()
+    try:
+        assert "fleet_jobs_total 3" in _get(port, "/metrics")[1]
+        assert _get(port, "/healthz")[0] == 200, "no health plane -> ok"
+        assert _get(port, "/costs.json")[0] == 404, "no ledger -> 404"
+    finally:
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# e2e: two-replica router serve, merged ledger, summed attribution
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def approx_setup(tmp_path_factory):
+    root = tmp_path_factory.mktemp("costslib")
+    fill_library(root / "lib", [benchmark("mul_i4"), trunc_mul2(),
+                                zero_mul2()])
+    compiled, exact_area, _ = load_mul_frontier(root / "lib")
+    cfg = get_config("gemma3-1b", reduced=True).with_approx_mlp()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    ladder = PlanLadder.build(compiled, cfg.n_layers, exact_area=exact_area,
+                              levels=4)
+    return compiled, exact_area, cfg, params, ladder
+
+
+def test_router_cost_attribution_e2e(tmp_path, approx_setup):
+    """Tentpole e2e: a traced two-replica serve (gold homed on an exact
+    replica, batch on a deep one) produces a merged ledger that audits
+    clean and reconciles, with per-replica attribution summing to the
+    router's fleet total and gold's dividend strictly under batch's."""
+    compiled, exact_area, cfg, params, ladder = approx_setup
+
+    def mk(level):
+        return ContinuousServingEngine(
+            cfg, params, max_slots=2, prompt_len=8, gen_len=8, page_size=4,
+            plan=ladder.plan(level), compiled=compiled,
+            exact_area=exact_area)
+
+    trace_dir = tmp_path / "trace"
+    obs_trace.configure(trace_dir, process_tag="serve")
+    try:
+        router = ReplicaRouter([
+            Replica("gold-exact", mk(0), classes=("gold",)),
+            Replica("batch-deep", mk(len(ladder) - 1), classes=("batch",)),
+        ])
+        prof = make_profile("ramp", ticks=4, per_tick=4, prompt_len=8,
+                            gen_len=8,
+                            class_mix=(("gold", 0.5), ("batch", 0.5)),
+                            prompt_dist=("uniform", 3, 8))
+        out = router.serve(prof, seed=0)
+    finally:
+        obs_trace.reset()
+        obs_prov._ledgers.clear()
+
+    assert out["requests"] == prof.total_requests
+    rep = cost_report(read_ledger(trace_dir))
+    assert rep["reconciled"] is True, rep["problems"]
+    assert rep["n_done"] == rep["n_complete"] == prof.total_requests
+    assert rep["mac_gap"] == 0
+    assert set(rep["replicas"]) == {"gold-exact", "batch-deep"}
+    # every request row names the replica that served it
+    assert all(r.get("replica") in ("gold-exact", "batch-deep")
+               for r in rep["requests"].values())
+
+    # per-replica attribution sums exactly to the fleet totals
+    for k in ("tokens", "mlp_macs", "approx_macs"):
+        assert sum(r[k] for r in rep["replicas"].values()) \
+            == rep["totals"][k], k
+    for end in (0, 1):
+        assert sum(r["area_mac_saved"][end]
+                   for r in rep["replicas"].values()) \
+            == pytest.approx(rep["totals"]["area_mac_saved"][end], rel=1e-6)
+
+    # the dividend went where the routing sent the cheap traffic: under a
+    # router each replica is homed to classes, so per-replica attribution
+    # IS the class attribution (the engines themselves queue as "std")
+    gold = rep["replicas"]["gold-exact"]["area_mac_saved"]
+    batch = rep["replicas"]["batch-deep"]["area_mac_saved"]
+    assert gold == [0.0, 0.0], "exact-homed gold must earn no dividend"
+    assert batch[0] > 0 and batch[1] >= batch[0]
+    assert rep["replicas"]["gold-exact"]["approx_macs"] == 0
+
+    # the live telemetry rollup (router summary) agrees with the ledger
+    assert out["costs"]["mlp_macs"] == rep["totals"]["mlp_macs"]
+    assert out["costs"]["approx_macs"] == rep["totals"]["approx_macs"]
+    assert out["costs"]["area_mac_saved"][0] == pytest.approx(
+        rep["totals"]["area_mac_saved"][0], rel=1e-3)
+
+    # and the CLI gate passes against the real artifacts
+    assert obs_main(["costs", "--trace", str(trace_dir),
+                     "--require-reconciled"]) == 0
+    assert obs_main(["provenance", "--trace", str(trace_dir)]) == 0
